@@ -1,0 +1,67 @@
+"""Shared benchmark utilities: hardware profiles, timers, subprocess runner."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+ART = os.path.join(REPO, "benchmarks", "artifacts")
+
+
+@dataclass(frozen=True)
+class HwProfile:
+    name: str
+    flops: float          # peak FLOP/s per chip (bf16/fp16)
+    hbm_bw: float         # bytes/s per chip
+    link_bw: float        # bytes/s per chip interconnect (all-to-all usable)
+
+    @property
+    def desc(self):
+        return (f"{self.name}: {self.flops/1e12:.0f} TFLOP/s, "
+                f"{self.hbm_bw/1e9:.0f} GB/s HBM, "
+                f"{self.link_bw/1e9:.1f} GB/s link")
+
+
+# the TARGET for the roofline (per the spec): TPU v5e
+TPU_V5E = HwProfile("tpu-v5e", 197e12, 819e9, 50e9)
+# the paper's two clusters (approximate public specs)
+V100_IB = HwProfile("v100-100Gb-IB", 112e12, 900e9, 12.5e9 / 8)   # IB shared per GPU
+A100_IB = HwProfile("a100-1.6Tb-IB", 312e12, 2039e9, 200e9 / 8)
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        r = fn(*args)
+    _block(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    _block(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def _block(r):
+    import jax
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, r)
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row)
+    return row

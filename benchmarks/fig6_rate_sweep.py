@@ -1,0 +1,91 @@
+"""Paper Figure 6: effect of the dropout rate p on throughput and quality.
+
+Sweeps p in {0, 0.1, ..., 0.5} for Gate-Expert-Drop (the paper's Fig-6
+setting): quality from CPU training on the synthetic MT task, throughput
+from the analytic step model (the a2a is free inside one CPU process).
+Paper claims under test: throughput increases monotonically with p; the
+quality delta peaks at a moderate p (0.2 in the paper) and goes NEGATIVE
+at p = 0.5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import V100_IB, csv_row
+from repro.configs import get_config, reduced
+from repro.configs.base import GatingDropoutConfig, TrainConfig
+from repro.core.gating_dropout import drop_decision_host
+from repro.data import MTTaskConfig, MultilingualMT
+from repro.models import init_model
+from repro.training import init_train_state, make_eval_step, make_train_step
+from benchmarks.table3_throughput import step_terms
+
+
+def quality(rate: float, *, steps: int, batch: int, seed: int = 0) -> float:
+    cfg = reduced(get_config("zcode-m3-base"))
+    mode = "gate_expert_drop" if rate > 0 else "off"
+    moe = dataclasses.replace(cfg.moe, gating_dropout=GatingDropoutConfig(
+        mode=mode, rate=rate))
+    cfg = dataclasses.replace(cfg, moe=moe)
+    task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8))
+    tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
+                     seed=seed)
+    state = init_train_state(init_model(jax.random.PRNGKey(seed), cfg), tc)
+    step = make_train_step(cfg, tc)
+    gd = cfg.moe.gating_dropout
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
+             if k != "lang"}
+        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
+        state, _ = step(state, b, dec)
+    ev = make_eval_step(cfg)
+    vb = {k: jnp.asarray(v) for k, v in task.sample_batch(77_000, 64).items()
+          if k != "lang"}
+    return float(ev(state["params"], vb)["acc"])
+
+
+def model_throughput(rate: float) -> float:
+    cfg = get_config("zcode-m3-big")
+    t_c, t_a = step_terms(cfg, V100_IB, 64)
+    # expert-drop: dropped steps skip both the a2a AND the routed-expert FLOPs
+    t = t_c * (1.0 - rate * _expert_flop_share(cfg)) + t_a * (1.0 - rate)
+    return 435_000 / t
+
+
+def _expert_flop_share(cfg) -> float:
+    """Fraction of active FLOPs in routed experts (skipped by expert-drop)."""
+    act = cfg.n_active_params()
+    n_moe = sum(1 for i in range(cfg.n_layers) if cfg.moe.is_moe_layer(i))
+    n_moe += sum(1 for i in range(cfg.encdec.n_encoder_layers)
+                 if cfg.moe.is_moe_layer(i))
+    mlp_mult = 3 if cfg.gated_mlp else 2
+    expert_params = n_moe * cfg.moe.top_k * mlp_mult * cfg.d_model * \
+        cfg.moe.d_ff(cfg.d_ff)
+    return expert_params / act
+
+
+def main(fast: bool = True):
+    steps = 35 if fast else 300
+    batch = 16 if fast else 32
+    rates = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+    base_acc = None
+    out = {}
+    for p in rates:
+        acc = quality(p, steps=steps, batch=batch)
+        if base_acc is None:
+            base_acc = acc
+        tp = model_throughput(p)
+        out[p] = {"acc": acc, "acc_delta": acc - base_acc,
+                  "model_tok_s": tp}
+        csv_row(f"fig6/p{p:.1f}", 0.0,
+                f"acc={acc:.3f};delta={acc-base_acc:+.3f};"
+                f"model_tok_s={tp:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(fast=False), indent=1))

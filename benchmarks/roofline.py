@@ -1,0 +1,185 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective wire bytes / (chips * link_bw)
+
+cost_analysis() on the SPMD-partitioned module reports PER-DEVICE flops /
+bytes, so terms divide by per-chip peaks directly. Collective wire bytes
+come from the HLO text parse (ring-algorithm per-device traffic).
+Also reports MODEL_FLOPS = 6*N_active*D vs HLO_FLOPs (usefulness ratio).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import ART, TPU_V5E, HwProfile
+
+DRY = os.path.join(ART, "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# analytic attention-FLOP correction
+# ---------------------------------------------------------------------------
+# The flash attention used in train/prefill wraps its block loops in
+# lax.scan / lax.map, which XLA cost analysis counts ONCE — the exact-cost
+# artifacts therefore contain ~one (Cq x Ck) block per attention call
+# (measured: 1/64 of the true total at L=8k). We add the analytic flops of
+# what the runtime graph actually executes (masked FULL blocks: flash does
+# not skip), and subtract nothing (the counted block is <2% error).
+
+def attention_flops_correction(rec) -> float:
+    """Per-device attention flops missing from the artifact."""
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.models.transformer import layer_plan
+    if rec["kind"] == "decode":
+        return 0.0           # decode attention is a direct einsum (counted)
+    try:
+        cfg = get_config(rec["arch"])
+    except KeyError:
+        return 0.0
+    shape = INPUT_SHAPES[rec["shape"]]
+    L, B = shape.seq_len, shape.global_batch
+    flops = 0.0
+    chunk_thresh = 2 * 1024   # flash path only when Lk > 2*chunk
+    if L <= chunk_thresh:
+        return 0.0
+    for seg in layer_plan(cfg):
+        for spec in seg.pattern:
+            n = seg.repeats
+            if spec.mixer in ("gqa", "hybrid"):
+                hd2 = 2 * cfg.head_dim_
+                pairs = float(L) * L   # masked full blocks
+                flops += n * 2.0 * B * pairs * cfg.n_heads * hd2
+            elif spec.mixer == "mla":
+                m = cfg.mla
+                dd = (m.qk_nope_head_dim + m.qk_rope_head_dim
+                      + m.v_head_dim)
+                flops += n * 2.0 * B * float(L) * L * cfg.n_heads * dd
+    mult = 4.0 if rec["kind"] == "train" else 1.0   # bwd 2x + remat re-fwd
+    return flops * mult / rec["n_devices"]
+
+
+def analyze(rec: Dict, hw: HwProfile = TPU_V5E) -> Dict:
+    n = rec["n_devices"]
+    flops_dev = rec["flops"]                      # per-device (SPMD module)
+    if rec.get("tag") in ("exact",) or str(rec.get("tag", "")).startswith("hc"):
+        flops_dev += attention_flops_correction(rec)
+    bytes_dev = rec["bytes_accessed"]
+    wire = sum(c.get("wire_bytes", 0.0) for c in rec["collectives"].values())
+    t_compute = flops_dev / hw.flops
+    t_memory = bytes_dev / hw.hbm_bw
+    t_coll = wire / hw.link_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    # MODEL_FLOPS: 6*N_active*D tokens (training: x3 for fwd+bwd handled by
+    # the 6; decode/prefill: 2*N_active*D)
+    toks = rec["tokens_per_step"]
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * rec["n_active_params"] * toks
+    hlo_total = flops_dev * n
+    useful = model_flops / hlo_total if hlo_total > 0 else 0.0
+    step_time = max(terms.values())
+    ideal = model_flops / (n * hw.flops)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["tag"] or
+        ("pod512" if n == 512 else "pod256"),
+        "n_devices": n,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "roofline_frac": ideal / step_time if step_time > 0 else 0.0,
+        "hbm_gib": rec["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        "temp_gib": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def bottleneck_note(a: Dict) -> str:
+    d = a["dominant"]
+    if d == "collective":
+        return ("skip/shrink the all-to-all (Gating Dropout reduces the "
+                "expectation by p) or slice d over `model` before the a2a")
+    if d == "memory":
+        return ("raise arithmetic intensity: larger per-device batch, fuse "
+                "elementwise chains, keep weights resident (bf16)")
+    return ("near compute roof: cut redundant FLOPs (remat recompute, "
+            "masked-causal waste) or overlap collectives with compute")
+
+
+def load_records(mesh: str = "pod256", tag: str = "") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRY, f"*__{mesh}{tag}.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if (tag == "" and len(parts) != 3) or (tag and len(parts) != 4):
+            continue
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def load_joined(mesh: str = "pod256") -> List[Dict]:
+    """Exact-cost (unrolled) records, with memory figures taken from the
+    scan-mode baseline (the production runtime uses scanned layers — its
+    buffer assignment is the memory number that matters)."""
+    exact = {(r["arch"], r["shape"]): r for r in load_records(mesh, "__exact")}
+    scan = {(r["arch"], r["shape"]): r for r in load_records(mesh, "")}
+    out = []
+    for key, r in sorted(exact.items()):
+        r = dict(r)
+        if key in scan:
+            r["memory"] = scan[key]["memory"]
+        out.append(r)
+    # combos not yet in the exact sweep fall back to scan records
+    for key, r in sorted(scan.items()):
+        if key not in exact:
+            out.append(r)
+    return out
+
+
+def markdown_table(analyses: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful FLOPs | roofline frac | args GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for a in analyses:
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3e} | "
+            f"{a['t_memory_s']:.3e} | {a['t_collective_s']:.3e} | "
+            f"**{a['dominant']}** | {a['useful_flops_ratio']*100:.0f}% | "
+            f"{a['roofline_frac']*100:.1f}% | {a['hbm_gib']:.1f} |")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod256")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    if args.tag is None:
+        recs = load_joined(args.mesh)
+    else:
+        recs = load_records(args.mesh, f"__{args.tag}" if args.tag else "")
+    analyses = [analyze(r) for r in recs]
+    if args.markdown:
+        print(markdown_table(analyses))
+        return
+    print("arch,shape,mesh,t_compute,t_memory,t_collective,dominant,"
+          "useful_ratio,roofline_frac,note")
+    for a in analyses:
+        print(f"{a['arch']},{a['shape']},{a['mesh']},{a['t_compute_s']:.4e},"
+              f"{a['t_memory_s']:.4e},{a['t_collective_s']:.4e},"
+              f"{a['dominant']},{a['useful_flops_ratio']:.3f},"
+              f"{a['roofline_frac']:.3f},\"{bottleneck_note(a)}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Table 3 (Web-50): throughput of baseline / Gate-Drop /
+Gate-Expert-Drop on two clusters (V100 + 100Gb IB vs A100 + 1.6Tb IB).
+
+Analytic roofline model of the zcode-m3-big MoE training step per method
+per hardware profile. The paper's qualitative claim under test: the
+RELATIVE improvement from Gating Dropout is larger on the slower
+(more communication-bound) cluster.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import A100_IB, TPU_V5E, V100_IB, HwProfile, csv_row
+from repro.configs import get_config
+from repro.core.gating_dropout import (expected_alltoall_fraction,
+                                       expected_expert_flop_fraction)
+from repro.configs.base import GatingDropoutConfig
+
+SEQ = 1024
+GLOBAL_TOKENS = 435_000         # paper batch: 435k tokens
+N_DEVICES = 64                  # paper: 64 GPUs on Web-50
+
+
+def step_terms(cfg, hw: HwProfile, n: int):
+    """(t_compute, t_a2a) per training step of the MoE enc-dec model."""
+    toks = GLOBAL_TOKENS
+    flops = 6 * cfg.n_active_params() * toks
+    t_compute = flops / (n * hw.flops)
+    # all-to-all: 2 bytes * d * tokens, x2 (dispatch+combine), x2 (fwd+bwd),
+    # per MoE layer
+    n_moe = sum(1 for i in range(cfg.n_layers) if cfg.moe.is_moe_layer(i))
+    n_moe += sum(1 for i in range(cfg.encdec.n_encoder_layers)
+                 if cfg.moe.is_moe_layer(i))
+    a2a_bytes = 2 * cfg.d_model * toks * 2 * 2 * n_moe
+    t_a2a = (a2a_bytes / n) / hw.link_bw
+    return t_compute, t_a2a
+
+
+def throughput(cfg, hw, gd: GatingDropoutConfig, n=N_DEVICES):
+    t_c, t_a = step_terms(cfg, hw, n)
+    t = (t_c * expected_expert_flop_fraction(gd)
+         + t_a * expected_alltoall_fraction(gd))
+    return GLOBAL_TOKENS / t
+
+
+def main(fast: bool = True):
+    cfg = get_config("zcode-m3-big")
+    methods = {
+        "baseline": GatingDropoutConfig(mode="off", rate=0.0),
+        "gate_drop": GatingDropoutConfig(mode="gate_drop", rate=0.3),
+        "gate_expert_drop": GatingDropoutConfig(mode="gate_expert_drop",
+                                                rate=0.2),
+    }
+    paper = {"v100-100Gb-IB": {"baseline": 126e3, "gate_drop": 140e3,
+                               "gate_expert_drop": 146e3},
+             "a100-1.6Tb-IB": {"baseline": 362e3, "gate_drop": 372e3,
+                               "gate_expert_drop": 384e3}}
+    out = {}
+    for hw in (V100_IB, A100_IB, TPU_V5E):
+        out[hw.name] = {}
+        base = throughput(cfg, hw, methods["baseline"])
+        for m, gd in methods.items():
+            tp = throughput(cfg, hw, gd)
+            rel = (tp / base - 1) * 100
+            p = paper.get(hw.name, {}).get(m)
+            prel = ((p / paper[hw.name]["baseline"] - 1) * 100
+                    if p else None)
+            out[hw.name][m] = {"tok_s": tp, "rel_impr_pct": rel,
+                               "paper_tok_s": p, "paper_rel_pct": prel}
+            csv_row(f"table3/{hw.name}/{m}", 1e6 * GLOBAL_TOKENS / tp,
+                    f"model_tok_s={tp:.0f};rel={rel:.1f}%"
+                    + (f";paper_rel={prel:.1f}%" if prel is not None else ""))
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

@@ -1,0 +1,79 @@
+"""Paper Table 4 (Web-50): per-direction quality incl. LOW-RESOURCE split.
+
+Trains baseline vs Gate-Drop on the synthetic multilingual task whose last
+quarter of languages are low-resource (5% sampling weight), then evaluates
+token accuracy per language group. Paper claim under test: Gating Dropout's
+regularization helps MOST on low-resource languages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_config, reduced
+from repro.configs.base import GatingDropoutConfig, TrainConfig
+from repro.core.gating_dropout import drop_decision_host
+from repro.data import MTTaskConfig, MultilingualMT
+from repro.models import init_model
+from repro.training import init_train_state, make_eval_step, make_train_step
+
+
+def train_and_eval(mode: str, rate: float, *, steps: int, batch: int,
+                   seed: int = 0) -> Dict:
+    cfg = reduced(get_config("zcode-m3-base"))
+    moe = dataclasses.replace(cfg.moe, gating_dropout=GatingDropoutConfig(
+        mode=mode, rate=rate))
+    cfg = dataclasses.replace(cfg, moe=moe)
+    tcfg = MTTaskConfig(vocab=cfg.vocab, n_langs=8, low_resource_frac=0.25,
+                        low_resource_weight=0.05)
+    task = MultilingualMT(tcfg)
+    tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
+                     seed=seed)
+    state = init_train_state(init_model(jax.random.PRNGKey(seed), cfg), tc)
+    step = make_train_step(cfg, tc)
+    gd = cfg.moe.gating_dropout
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
+             if k != "lang"}
+        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
+        state, _ = step(state, b, dec)
+    ev = make_eval_step(cfg)
+    per_lang = {}
+    for lang in range(tcfg.n_langs):
+        vb = task.sample_batch(50_000 + lang, 32, lang=lang)
+        vb = {k: jnp.asarray(v) for k, v in vb.items() if k != "lang"}
+        per_lang[lang] = float(ev(state["params"], vb)["acc"])
+    low = [per_lang[l] for l in task.low_langs]
+    high = [per_lang[l] for l in range(tcfg.n_langs)
+            if l not in task.low_langs]
+    return {"per_lang": per_lang, "avg": float(np.mean(list(per_lang.values()))),
+            "low": float(np.mean(low)), "high": float(np.mean(high))}
+
+
+def main(fast: bool = True):
+    steps = 40 if fast else 400
+    batch = 16 if fast else 32
+    res = {
+        "baseline": train_and_eval("off", 0.0, steps=steps, batch=batch),
+        "gate_drop": train_and_eval("gate_drop", 0.3, steps=steps,
+                                    batch=batch),
+    }
+    for name, r in res.items():
+        csv_row(f"table4/{name}", 0.0,
+                f"avg={r['avg']:.3f};low_resource={r['low']:.3f};"
+                f"high_resource={r['high']:.3f}")
+    d_low = res["gate_drop"]["low"] - res["baseline"]["low"]
+    d_all = res["gate_drop"]["avg"] - res["baseline"]["avg"]
+    csv_row("table4/delta", 0.0,
+            f"gatedrop_minus_baseline_avg={d_all:+.3f};low={d_low:+.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(fast=False), indent=1))

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

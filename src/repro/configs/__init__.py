@@ -1,0 +1,62 @@
+"""Config registry: ``get_config(arch_id)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.configs.base import (GatingDropoutConfig, InputShape, INPUT_SHAPES,
+                                MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                TrainConfig, reduced)
+
+_MODULES = {
+    "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "yi-6b": "repro.configs.yi_6b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "whisper-small": "repro.configs.whisper_small",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "zcode-m3-base": "repro.configs.zcode_m3",
+    "zcode-m3-big": "repro.configs.zcode_m3",
+}
+
+ARCHS = tuple(_MODULES)
+ASSIGNED_ARCHS = ARCHS[:10]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    cfg = mod.CONFIG_BIG if arch_id.endswith("-big") else mod.CONFIG
+    assert cfg.arch_id == arch_id, (cfg.arch_id, arch_id)
+    return cfg
+
+
+# Which (arch, shape) pairs are applicable. long_500k requires sub-quadratic
+# attention (SWA / SSM / hybrid); decode shapes need a decoder.
+_LONG_OK = {"starcoder2-3b", "h2o-danube-3-4b", "hymba-1.5b", "mamba2-1.3b"}
+
+
+def shape_applicable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in _LONG_OK
+    return True
+
+
+def applicable_pairs():
+    for a in ASSIGNED_ARCHS:
+        for s in INPUT_SHAPES:
+            if shape_applicable(a, s):
+                yield a, s
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED_ARCHS", "INPUT_SHAPES", "InputShape", "GatingDropoutConfig",
+    "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig", "TrainConfig",
+    "applicable_pairs", "get_config", "reduced", "shape_applicable",
+]

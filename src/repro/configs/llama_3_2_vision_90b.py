@@ -1,0 +1,23 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision] scaled per assignment:
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Vision encoder is a STUB: input_specs provides precomputed patch embeddings.
+"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    rope_theta=500_000.0,
+    max_seq=131_072,
+    vlm=VLMConfig(cross_attn_period=5, n_image_tokens=1601, d_image=1280),
+    fsdp=True,
+    source="hf:meta-llama/Llama-3.2-11B-Vision (90B scale per assignment)",
+)

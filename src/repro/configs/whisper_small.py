@@ -1,0 +1,24 @@
+"""whisper-small [audio] — encoder-decoder with conv frontend (STUB).
+
+[arXiv:2212.04356] 12L d_model=768 12H d_ff=3072 vocab=51865.
+The mel-spectrogram + conv feature extractor is stubbed: input_specs()
+provides precomputed frame embeddings (B, 1500, 768).
+"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-small",
+    family="encdec",
+    n_layers=12,             # decoder layers
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=51865,
+    max_seq=4096,
+    norm="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    encdec=EncDecConfig(n_encoder_layers=12, encoder_seq=1500, frontend="stub"),
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — Gating Dropout + expert-parallel MoE."""
+from repro.core.gating_dropout import (decision_key, drop_decision,
+                                       drop_decision_host,
+                                       expected_alltoall_fraction,
+                                       expected_expert_flop_fraction)
+from repro.core.moe import (ParallelContext, init_moe_params, moe_apply,
+                            moe_oracle, moe_param_specs, moe_sharded)
+from repro.core import router
+
+__all__ = [
+    "ParallelContext", "decision_key", "drop_decision", "drop_decision_host",
+    "expected_alltoall_fraction", "expected_expert_flop_fraction",
+    "init_moe_params", "moe_apply", "moe_oracle", "moe_param_specs",
+    "moe_sharded", "router",
+]

@@ -1,0 +1,189 @@
+"""Token -> expert routing: gating networks, top-k selection, capacity
+dispatch/combine. Pure shard-local functions — used unchanged by both the
+dense oracle (vmapped over virtual shards) and the shard_map MoE (per
+device), so the two paths are numerically identical by construction.
+
+Routers:
+  softmax  -- Switch/GShard gating (paper's setting; jitter noise supported)
+  sigmoid  -- DeepSeek-V3-style sigmoid scores, renormalized top-k
+  hash     -- Hash-Layer baseline (Roller et al. 2021): fixed multiplicative
+              hash of token ids; no learned gate, no balance-loss gradient.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+_HASH_MULT = 2654435761  # Knuth multiplicative hash
+
+
+class RouteResult(NamedTuple):
+    """Shard-local routing decision for T tokens."""
+    topk_idx: jax.Array      # (T, k) int32 expert ids (global expert space)
+    topk_w: jax.Array        # (T, k) combine weights
+    probs: jax.Array         # (T, E) router probabilities (for balance loss)
+    logits: jax.Array        # (T, E) raw logits (for z-loss)
+
+
+class DispatchInfo(NamedTuple):
+    pos: jax.Array           # (T, k) int32 position within expert buffer
+    keep: jax.Array          # (T, k) bool: survived capacity
+    topk_idx: jax.Array      # (T, k)
+    topk_w: jax.Array        # (T, k)
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    import math
+    return max(1, math.ceil(factor * n_tokens * top_k / n_experts))
+
+
+def router_logits(wr: jax.Array, x: jax.Array, cfg: MoEConfig,
+                  rng: Optional[jax.Array], is_training: bool) -> jax.Array:
+    """(T, d) -> (T, E) logits; applies multiplicative input jitter in training."""
+    if is_training and cfg.jitter_eps > 0.0 and rng is not None:
+        lo, hi = 1.0 - cfg.jitter_eps, 1.0 + cfg.jitter_eps
+        x = x * jax.random.uniform(rng, x.shape, x.dtype, lo, hi)
+    return (x.astype(jnp.float32) @ wr.astype(jnp.float32))
+
+
+def route(wr: jax.Array, x: jax.Array, cfg: MoEConfig, *,
+          rng: Optional[jax.Array] = None, is_training: bool = True,
+          token_ids: Optional[jax.Array] = None,
+          expert_lo: int | jax.Array = 0,
+          n_local: Optional[int] = None) -> RouteResult:
+    """Route T tokens. If ``n_local`` is given, routing is RESTRICTED to the
+    local expert group [expert_lo, expert_lo + n_local) — the Gating-Dropout
+    local path: tokens ignore remote experts entirely.
+    """
+    E = cfg.n_experts
+    T = x.shape[0]
+    k = cfg.top_k
+    logits = router_logits(wr, x, cfg, rng, is_training)
+
+    if cfg.router_type == "hash":
+        assert token_ids is not None, "hash router needs token ids"
+        h = (token_ids.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)) >> jnp.uint32(16)
+        if n_local is None:
+            idx0 = (h % jnp.uint32(E)).astype(jnp.int32)
+        else:
+            idx0 = (h % jnp.uint32(n_local)).astype(jnp.int32) + expert_lo
+        topk_idx = idx0[:, None]  # hash router is inherently top-1
+        if k > 1:  # spread extra slots deterministically
+            extra = [(idx0 + 1 + j) % E for j in range(k - 1)]
+            topk_idx = jnp.stack([idx0] + extra, axis=1).astype(jnp.int32)
+        topk_w = jnp.full((T, k), 1.0 / k, dtype=jnp.float32)
+        probs = jax.nn.one_hot(idx0, E, dtype=jnp.float32)
+        return RouteResult(topk_idx, topk_w, probs, jax.lax.stop_gradient(logits))
+
+    if n_local is not None:
+        # mask logits outside the local group (Gate-Drop local path)
+        eids = jnp.arange(E, dtype=jnp.int32)
+        local = (eids >= expert_lo) & (eids < expert_lo + n_local)
+        logits = jnp.where(local[None, :], logits, -jnp.inf)
+
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        if n_local is not None:
+            scores = jnp.where(jnp.isfinite(logits), scores, 0.0)
+        topk_s, topk_idx = jax.lax.top_k(scores, k)
+        topk_w = topk_s / jnp.maximum(topk_s.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:  # softmax (paper)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topk_p, topk_idx = jax.lax.top_k(probs, k)
+        if k > 1:
+            topk_w = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+        else:
+            topk_w = topk_p  # paper eq. (2): y = p_i(x) E_i(x)
+    return RouteResult(topk_idx.astype(jnp.int32), topk_w, probs, logits)
+
+
+def _positions_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each entry within its expert, in stable token order.
+
+    Memory-light sort-based formulation (no (T*k, E) one-hot): O(Tk log Tk).
+    """
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    pos_sorted = jnp.arange(tk, dtype=jnp.int32) - starts[flat_e[order]]
+    return jnp.zeros((tk,), jnp.int32).at[order].set(pos_sorted)
+
+
+def dispatch_info(rr: RouteResult, n_experts: int, cap: int,
+                  valid: Optional[jax.Array] = None) -> DispatchInfo:
+    """Compute buffer positions. ``valid`` (T, k) masks entries that must not
+    consume capacity (e.g. non-local picks on a Gate-Drop local step)."""
+    T, k = rr.topk_idx.shape
+    flat_e = rr.topk_idx.reshape(-1)
+    if valid is not None:
+        # phantom bucket n_experts for invalid entries
+        flat_e = jnp.where(valid.reshape(-1), flat_e, n_experts)
+        pos = _positions_in_expert(flat_e, n_experts + 1).reshape(T, k)
+        keep = (pos < cap) & valid
+    else:
+        pos = _positions_in_expert(flat_e, n_experts).reshape(T, k)
+        keep = pos < cap
+    return DispatchInfo(pos=pos, keep=keep, topk_idx=rr.topk_idx, topk_w=rr.topk_w)
+
+
+def dispatch(x: jax.Array, info: DispatchInfo, n_experts: int, cap: int,
+             expert_lo: int | jax.Array = 0) -> jax.Array:
+    """Scatter tokens (T, d) into expert buffers (n_experts, cap, d).
+
+    ``expert_lo`` re-bases global expert ids into a local buffer (used by the
+    Gate-Drop local path where the buffer covers only the local group).
+    """
+    T, k = info.topk_idx.shape
+    d = x.shape[-1]
+    keep = info.keep.reshape(-1)
+    flat_e = jnp.where(keep, (info.topk_idx - expert_lo).reshape(-1), n_experts)
+    flat_p = jnp.where(keep, info.pos.reshape(-1), cap)        # OOB -> dropped
+    xk = jnp.broadcast_to(x[:, None, :], (T, k, d)).reshape(T * k, d)
+    buf = jnp.zeros((n_experts, cap, d), x.dtype)
+    return buf.at[flat_e, flat_p].add(xk, mode="drop")
+
+
+def combine(buf: jax.Array, info: DispatchInfo, *, weight_dtype=jnp.float32,
+            expert_lo: int | jax.Array = 0) -> jax.Array:
+    """Gather expert outputs back to token order with combine weights.
+
+    buf: (n_experts, cap, d) -> (T, d)
+    """
+    T, k = info.topk_idx.shape
+    keep = info.keep.reshape(-1)
+    flat_e = jnp.where(keep, (info.topk_idx - expert_lo).reshape(-1), 0)
+    flat_p = jnp.where(keep, info.pos.reshape(-1), 0)
+    gathered = buf.at[flat_e, flat_p].get(mode="fill", fill_value=0)  # (T*k, d)
+    gathered = gathered.reshape(T, k, -1)
+    w = (info.topk_w * info.keep).astype(weight_dtype)
+    return jnp.einsum("tkd,tk->td", gathered.astype(weight_dtype), w).astype(buf.dtype)
+
+
+def balance_loss(rr: RouteResult, cfg: MoEConfig) -> jax.Array:
+    """Switch/GShard auxiliary balance loss: E * sum_e f_e * P_e.
+
+    f_e = fraction of tokens whose top-1 choice is e (non-differentiable),
+    P_e = mean router probability of e. Minimized (=1) at uniform load.
+    """
+    E = cfg.n_experts
+    top1 = rr.topk_idx[:, 0]
+    f = jnp.zeros((E,), jnp.float32).at[top1].add(1.0) / top1.shape[0]
+    p = rr.probs.mean(axis=0)
+    return E * jnp.sum(jax.lax.stop_gradient(f) * p)
+
+
+def router_z_loss(rr: RouteResult) -> jax.Array:
+    lse = jax.scipy.special.logsumexp(rr.logits, axis=-1)
+    return jnp.mean(lse ** 2)
+
+
+def expert_load(rr: RouteResult, cfg: MoEConfig) -> jax.Array:
+    """(E,) fraction of top-1 assignments per expert (monitoring)."""
+    f = jnp.zeros((cfg.n_experts,), jnp.float32).at[rr.topk_idx[:, 0]].add(1.0)
+    return f / rr.topk_idx.shape[0]

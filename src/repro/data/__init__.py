@@ -1,0 +1,5 @@
+from repro.data.pipeline import (BOS, EOS, PAD, LMTaskConfig, MTTaskConfig,
+                                 MultilingualMT, SyntheticLM)
+
+__all__ = ["BOS", "EOS", "PAD", "LMTaskConfig", "MTTaskConfig",
+           "MultilingualMT", "SyntheticLM"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the MoE compute hot spots + decode attention.
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jit'd
+wrappers and the routing-table builders. Validated with interpret=True
+on CPU; BlockSpecs are MXU-aligned for the real TPU target.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.grouped_ffn import grouped_matmul
+from repro.kernels.moe_dispatch import combine, dispatch
+
+__all__ = ["combine", "dispatch", "flash_decode", "grouped_matmul", "ops",
+           "ref"]

@@ -1,0 +1,85 @@
+"""Flash decode-attention Pallas kernel: one query token vs a long KV cache.
+
+The decode shapes (decode_32k, long_500k) are memory-bound: the whole KV
+cache streams HBM->VMEM once per step. Grid (B, KV, S/bs) walks KV blocks
+with a running online-softmax (m, l, acc) in VMEM scratch; the GQA group's
+`rep` query heads share each KV block read (the factor that makes GQA
+decode HBM-efficient). Block sizes are multiples of 128 on the minor dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bs: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (rep, bs)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos <= idx_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))     # (rep, 1)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, index: jax.Array,
+                 *, bs: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar int32 (positions
+    > index are masked). Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    bs = min(bs, s)
+    assert s % bs == 0, (s, bs)
+    qg = q.reshape(b, kv, rep, hd)
+    grid = (b, kv, s // bs)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, hd), lambda bi, g, j, idx: (bi, g, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda bi, g, j, idx: (bi, j, g, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda bi, g, j, idx: (bi, j, g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, hd),
+                                   lambda bi, g, j, idx: (bi, g, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(index, jnp.int32).reshape(1), qg, k, v)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,57 @@
+"""Grouped (per-expert) matmul Pallas kernel — the MoE compute hot spot.
+
+TPU adaptation: after the all-to-all, every device holds (E_local, C, d)
+token buffers and (E_local, d, f) expert weights. A naive einsum pays one
+XLA loop per expert; this kernel tiles (C, f) blocks per expert on the
+MXU with an f32 VMEM accumulator, block shapes multiples of 128 on the
+minor dims.
+
+Grid: (E, C/bc, F/bf, D/bd) — innermost axis accumulates over d.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
+                   bf: int = 128, bd: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """x: (E, C, d) @ w: (E, d, f) -> (E, C, f), per-expert."""
+    e, c, d = x.shape
+    _, _, f = w.shape
+    bc = min(bc, c)
+    bf = min(bf, f)
+    bd = min(bd, d)
+    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (x.shape, w.shape)
+    grid = (e, c // bc, f // bf, d // bd)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e_, i, j, k: (e_, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e_, i, j, k: (e_, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e_, i, j, k: (e_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,103 @@
+"""MoE token dispatch / combine Pallas kernels (scalar-prefetch gathers).
+
+TPU adaptation of the scatter/gather around the all-to-all: instead of a
+data-dependent scatter (expensive on TPU), routing is precomputed into a
+slot->token map and the kernels become PURE GATHERS whose BlockSpec
+index_maps read the prefetched scalar routing tables — each grid step DMAs
+exactly one (1, d)-row from HBM to VMEM. This is the megablocks-style
+TPU-idiomatic form: the MXU never sees routing logic, and the gather rides
+the scalar-prefetch pipeline.
+
+  dispatch: buf[s] = x[slot_token[s]] * valid[s]       (S = E*C slots)
+  combine : y[t]  = sum_k w[t,k] * buf[token_slot[t,k]]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def _dispatch_kernel(idx_ref, valid_ref, x_ref, o_ref):
+    s = pl.program_id(0)
+    o_ref[0] = jnp.where(valid_ref[s] > 0, x_ref[0], 0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def dispatch(x: jax.Array, slot_token: jax.Array, slot_valid: jax.Array, *,
+             bd: int = 512, interpret: bool = True) -> jax.Array:
+    """x: (T, d); slot_token/slot_valid: (S,). Returns (S, d) buffer rows."""
+    t, d = x.shape
+    s = slot_token.shape[0]
+    bd = min(bd, d)
+    assert d % bd == 0
+    idx = jnp.clip(slot_token, 0, t - 1).astype(jnp.int32)
+    valid = slot_valid.astype(jnp.int32)
+    grid = (s, d // bd)
+    return pl.pallas_call(
+        _dispatch_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bd), lambda si, dj, idx, val: (idx[si], dj)),
+            ],
+            out_specs=pl.BlockSpec((1, bd), lambda si, dj, idx, val: (si, dj)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=interpret,
+    )(idx, valid, x)
+
+
+# ---------------------------------------------------------------------------
+# combine
+# ---------------------------------------------------------------------------
+
+def _make_combine_kernel(k: int):
+    def kernel(slot_ref, w_ref, *refs):
+        # refs: k buffer views + o_ref
+        o_ref = refs[-1]
+        t = pl.program_id(0)
+        acc = jnp.zeros(o_ref.shape[-1:], jnp.float32)
+        for kk in range(k):
+            acc = acc + w_ref[t, kk] * refs[kk][0].astype(jnp.float32)
+        o_ref[0] = acc.astype(o_ref.dtype)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def combine(buf: jax.Array, token_slot: jax.Array, weights: jax.Array,
+            keep: jax.Array, *, bd: int = 512,
+            interpret: bool = True) -> jax.Array:
+    """buf: (S, d); token_slot: (T, K); weights/keep: (T, K) -> y (T, d)."""
+    s, d = buf.shape
+    t, k = token_slot.shape
+    bd = min(bd, d)
+    assert d % bd == 0
+    slots = jnp.clip(token_slot, 0, s - 1).astype(jnp.int32)
+    w = (weights * keep).astype(jnp.float32)
+    grid = (t, d // bd)
+    in_specs = [
+        pl.BlockSpec((1, bd),
+                     functools.partial(
+                         lambda kk, ti, dj, slot, w_: (slot[ti, kk], dj), kk))
+        for kk in range(k)
+    ]
+    return pl.pallas_call(
+        _make_combine_kernel(k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bd), lambda ti, dj, slot, w_: (ti, dj)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, d), buf.dtype),
+        interpret=interpret,
+    )(slots, w, *([buf] * k))

@@ -1,0 +1,90 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (CPU container); on real TPU pass
+interpret=False (the kernels are written with MXU-aligned BlockSpecs).
+Routing-table construction (slot maps) lives here: it turns the
+router's DispatchInfo into the gather form the kernels consume.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+import contextlib
+
+from repro.core.router import DispatchInfo
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.grouped_ffn import grouped_matmul
+from repro.kernels.moe_dispatch import combine, dispatch
+
+# Global switch: when True the MoE layer routes its dispatch/FFN/combine
+# through the Pallas kernels (interpret=True on CPU). Flip with use_kernels().
+KERNELS_ENABLED = False
+
+
+@contextlib.contextmanager
+def use_kernels(enabled: bool = True):
+    global KERNELS_ENABLED
+    prev = KERNELS_ENABLED
+    KERNELS_ENABLED = enabled
+    try:
+        yield
+    finally:
+        KERNELS_ENABLED = prev
+
+
+def build_slot_maps(info: DispatchInfo, n_experts: int,
+                    cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """DispatchInfo -> (slot_token (E*C,), slot_valid (E*C,), token_slot (T,K)).
+
+    slot_token[e*C + c] = which token fills slot c of expert e;
+    token_slot[t, k]    = flat slot index for the (t, k) routing choice.
+    """
+    t, k = info.topk_idx.shape
+    flat_e = info.topk_idx.reshape(-1)
+    flat_p = info.pos.reshape(-1)
+    keep = info.keep.reshape(-1)
+    flat_slot = jnp.where(keep, flat_e * cap + flat_p, n_experts * cap)
+    token_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    slot_token = jnp.full((n_experts * cap + 1,), -1, jnp.int32
+                          ).at[flat_slot].set(token_ids, mode="drop")[:-1]
+    slot_valid = slot_token >= 0
+    token_slot = jnp.where(keep, flat_e * cap + flat_p, 0).reshape(t, k)
+    return slot_token, slot_valid, token_slot
+
+
+def moe_dispatch_op(x: jax.Array, info: DispatchInfo, n_experts: int,
+                    cap: int, *, interpret: bool = True) -> jax.Array:
+    """Kernel-backed equivalent of router.dispatch: (T,d) -> (E, C, d)."""
+    slot_token, slot_valid, _ = build_slot_maps(info, n_experts, cap)
+    buf = dispatch(x, slot_token, slot_valid, interpret=interpret)
+    return buf.reshape(n_experts, cap, x.shape[-1])
+
+
+def moe_combine_op(buf: jax.Array, info: DispatchInfo, *,
+                   interpret: bool = True) -> jax.Array:
+    """Kernel-backed equivalent of router.combine: (E, C, d) -> (T, d)."""
+    e, cap, d = buf.shape
+    _, _, token_slot = build_slot_maps(info, e, cap)
+    return combine(buf.reshape(e * cap, d), token_slot, info.topk_w,
+                   info.keep, interpret=interpret)
+
+
+def expert_ffn_op(buf: jax.Array, w_in: jax.Array, w_gate, w_out: jax.Array,
+                  act: str = "silu", *, interpret: bool = True) -> jax.Array:
+    """Full gated expert FFN from grouped_matmul kernels."""
+    h = grouped_matmul(buf, w_in, interpret=interpret)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if w_gate is not None:
+        g = grouped_matmul(buf, w_gate, interpret=interpret)
+        h = actf(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = actf(h.astype(jnp.float32)).astype(h.dtype)
+    return grouped_matmul(h, w_out, interpret=interpret)
+
+
+__all__ = ["build_slot_maps", "combine", "dispatch", "expert_ffn_op",
+           "flash_decode", "grouped_matmul", "moe_combine_op",
+           "moe_dispatch_op"]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (E, C, d), w: (E, d, f) -> (E, C, f). f32 accumulation."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def dispatch_ref(x: jax.Array, slot_token: jax.Array,
+                 slot_valid: jax.Array) -> jax.Array:
+    """Gather-form token dispatch.
+
+    x: (T, d); slot_token: (S,) int32 token index feeding each expert-buffer
+    slot (row-major (E, C) flattened); slot_valid: (S,) bool.
+    Returns (S, d) expert buffer rows.
+    """
+    rows = jnp.take(x, jnp.clip(slot_token, 0, x.shape[0] - 1), axis=0)
+    return jnp.where(slot_valid[:, None], rows, 0).astype(x.dtype)
+
+
+def combine_ref(buf: jax.Array, token_slot: jax.Array, weights: jax.Array,
+                keep: jax.Array) -> jax.Array:
+    """Weighted gather-combine of expert outputs.
+
+    buf: (S, d) flattened expert buffer rows; token_slot: (T, K) int32 slot
+    per (token, k); weights: (T, K) f32; keep: (T, K) bool.
+    Returns (T, d).
+    """
+    g = jnp.take(buf, jnp.clip(token_slot, 0, buf.shape[0] - 1), axis=0)
+    w = (weights * keep).astype(jnp.float32)
+    return jnp.einsum("tkd,tk->td", g.astype(jnp.float32), w).astype(buf.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     index: jax.Array) -> jax.Array:
+    """Single-token decode attention.
+
+    q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar — positions > index
+    masked out. Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    ke = jnp.repeat(k, rep, axis=2)
+    ve = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        ke.astype(jnp.float32)) * (hd ** -0.5)
+    valid = jnp.arange(s) <= index
+    logits = jnp.where(valid[None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p,
+                      ve.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,73 @@
+"""HLO-text collective parsing (roofline inputs). Import-safe: does not
+touch jax device state."""
+import re
+from typing import Dict
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+_COLLS = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
+          "collective-permute")
+_SHAPE_RE = re.compile(r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\])\s*"
+                       r"([a-z\-]+)")
+_TUPLE_ELT = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes per collective kind + record group sizes."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("%") or " = " in s:
+            m = _SHAPE_RE.search(s)
+            if not m:
+                continue
+            op = m.group(4)
+            if op not in _COLLS:
+                continue
+            if "-start" in s.split("=")[1][:80]:
+                pass
+            if m.group(1) is not None:      # tuple result
+                bytes_ = sum(_shape_bytes(d, dims)
+                             for d, dims in _TUPLE_ELT.findall(m.group(1)))
+            else:
+                bytes_ = _shape_bytes(m.group(2), m.group(3))
+            g = 1
+            gi = _GROUPS_IOTA.search(s)
+            if gi:
+                g = int(gi.group(2))
+            else:
+                gl = _GROUPS_LIST.search(s)
+                if gl:
+                    g = len(gl.group(1).split(","))
+            rec = out.setdefault(op, {"count": 0, "bytes": 0.0,
+                                      "wire_bytes": 0.0, "max_group": 1})
+            rec["count"] += 1
+            rec["bytes"] += bytes_
+            rec["max_group"] = max(rec["max_group"], g)
+            # per-device wire traffic (ring algorithms)
+            if op == "all-gather":
+                wire = bytes_ * (g - 1) / max(g, 1)
+            elif op == "all-reduce":
+                wire = 2 * bytes_ * (g - 1) / max(g, 1)
+            elif op == "reduce-scatter":
+                wire = bytes_ * (g - 1)   # result is the scattered shard
+            elif op == "all-to-all":
+                wire = bytes_ * (g - 1) / max(g, 1)
+            else:                          # collective-permute
+                wire = bytes_
+            rec["wire_bytes"] += wire
+    return out
+
+

@@ -1,0 +1,151 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch zcode-m3-base --reduced \
+      --steps 200 --batch 16 --task mt --gd-mode gate_drop --gd-rate 0.3
+
+Runs on CPU at reduced scale (or on a real mesh via --mesh d,m). Uses the
+paper's host_cond strategy by default: two executables, the dropped one
+free of all-to-all; the per-step consensus bit comes from the shared
+(seed, step) PRNG fold — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import GatingDropoutConfig, TrainConfig
+from repro.core.gating_dropout import drop_decision_host
+from repro.core.moe import ParallelContext
+from repro.checkpoint import save_checkpoint
+from repro.data import MTTaskConfig, MultilingualMT, LMTaskConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.metrics import corpus_bleu, strip_special
+from repro.models import init_model, prefill, decode_step
+from repro.training import init_train_state, make_eval_step, make_train_step
+
+
+def build_batch_fn(cfg, args):
+    if args.task == "mt":
+        task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=args.langs,
+                                           max_len=args.seq))
+        def fn(step):
+            b = task.sample_batch(step, args.batch)
+            return {k: jnp.asarray(v) for k, v in b.items() if k != "lang"}
+        return task, fn
+    task = SyntheticLM(LMTaskConfig(vocab=cfg.vocab, seq_len=args.seq))
+    def fn(step):
+        return {k: jnp.asarray(v) for k, v in
+                task.sample_batch(step, args.batch).items()}
+    return task, fn
+
+
+def greedy_bleu(params, cfg, task, *, n=32, max_new=36, seed=10_000):
+    """Greedy decode a validation batch -> token BLEU (MT task only)."""
+    b = task.sample_batch(seed, n)
+    batch = {"enc_tokens": jnp.asarray(b["enc_tokens"]),
+             "tokens": jnp.asarray(b["tokens"][:, :1])}   # BOS
+    _, caches = prefill(params, batch, cfg, max_seq=max_new + 2)
+    tok = batch["tokens"]
+    outs = [  ]
+    cur = tok
+    for i in range(max_new):
+        logits, caches = decode_step(params, caches, cur, i, cfg)
+        cur = logits.argmax(-1).astype(jnp.int32)
+        outs.append(np.asarray(cur)[:, 0])
+    hyp = np.stack(outs, 1)
+    refs = [strip_special(r) for r in b["labels"]]
+    hyps = [strip_special(h) for h in hyp]
+    return corpus_bleu(hyps, refs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zcode-m3-base")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--langs", type=int, default=8)
+    ap.add_argument("--task", default="mt", choices=["mt", "lm"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gd-mode", default=None,
+                    choices=[None, "off", "gate_drop", "gate_expert_drop"])
+    ap.add_argument("--gd-rate", type=float, default=None)
+    ap.add_argument("--router", default=None,
+                    choices=[None, "softmax", "sigmoid", "hash"])
+    ap.add_argument("--mesh", default=None, help="e.g. 4,2 => (data,model)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if cfg.moe is not None and (args.gd_mode or args.gd_rate is not None
+                                or args.router):
+        gd = cfg.moe.gating_dropout
+        gd = dataclasses.replace(
+            gd,
+            mode=args.gd_mode if args.gd_mode else gd.mode,
+            rate=args.gd_rate if args.gd_rate is not None else gd.rate)
+        moe = dataclasses.replace(
+            cfg.moe, gating_dropout=gd,
+            router_type=args.router or cfg.moe.router_type)
+        cfg = dataclasses.replace(cfg, moe=moe)
+
+    ctx = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        ctx = ParallelContext(mesh=make_mesh(shape, ("data", "model")[:len(shape)]))
+
+    tc = TrainConfig(lr=args.lr, warmup_steps=args.warmup, steps=args.steps,
+                     seed=args.seed)
+    task, batch_fn = build_batch_fn(cfg, args)
+    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    state = init_train_state(params, tc)
+    step_fn = make_train_step(cfg, tc, ctx)
+    gd = cfg.moe.gating_dropout if cfg.moe is not None else None
+
+    history = []
+    t0 = time.time()
+    tokens_done = 0
+    for i in range(args.steps):
+        batch = batch_fn(i)
+        dec = drop_decision_host(gd, args.seed, i) if gd and gd.enabled else False
+        state, m = step_fn(state, batch, bool(dec))
+        tokens_done += int(batch["tokens"].size)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            el = time.time() - t0
+            rec = {"step": i, "loss": float(m["loss"]), "acc": float(m["acc"]),
+                   "tok_s": tokens_done / max(el, 1e-9), "time_s": el}
+            if "balance" in m:
+                rec["balance"] = float(m["balance"])
+            if args.eval_every and args.task == "mt" and \
+                    (i % args.eval_every == 0 or i == args.steps - 1):
+                rec["bleu"] = greedy_bleu(state["params"], cfg, task)
+            history.append(rec)
+            print(json.dumps(rec))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, state,
+                        {"arch": cfg.arch_id})
+        print(f"checkpoint -> {args.ckpt_dir}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"arch": cfg.arch_id, "history": history,
+                       "gd": dataclasses.asdict(gd) if gd else None}, f)
+
+
+if __name__ == "__main__":
+    main()

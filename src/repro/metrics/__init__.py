@@ -1,0 +1,3 @@
+from repro.metrics.bleu import corpus_bleu, strip_special, token_accuracy
+
+__all__ = ["corpus_bleu", "strip_special", "token_accuracy"]

@@ -1,0 +1,6 @@
+from repro.models.model import (decode_step, init_cache, init_model,
+                                model_apply, prefill)
+from repro.models.transformer import LayerSpec, Segment, layer_plan
+
+__all__ = ["LayerSpec", "Segment", "decode_step", "init_cache", "init_model",
+           "layer_plan", "model_apply", "prefill"]

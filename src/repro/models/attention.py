@@ -1,0 +1,225 @@
+"""Attention: GQA with RoPE, full / chunked-flash (online softmax) paths,
+sliding-window support, decode against full or ring-buffer KV caches.
+
+Shapes: q (B, Lq, H, hd); k, v (B, Lk, KV, hd) with H % KV == 0.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, h: int) -> jax.Array:
+    """(B, L, KV, hd) -> (B, L, H, hd) by repeating groups."""
+    b, l, kv, hd = k.shape
+    if kv == h:
+        return k
+    return jnp.repeat(k, h // kv, axis=2)
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, causal: bool,
+          window: int) -> jax.Array:
+    """(Lq, Lk) boolean validity mask from absolute positions."""
+    m = jnp.broadcast_to(kpos[None, :] >= 0,
+                         (qpos.shape[0], kpos.shape[0]))
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   qpos: Optional[jax.Array] = None,
+                   kpos: Optional[jax.Array] = None,
+                   kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Quadratic attention. kv_valid: (B, Lk) or (Lk,) extra validity."""
+    b, lq, h, hd = q.shape
+    lk = k.shape[1]
+    if qpos is None:
+        qpos = jnp.arange(lq)
+    if kpos is None:
+        kpos = jnp.arange(lk)
+    ke = _expand_kv(k, h)
+    ve = _expand_kv(v, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   ke.astype(jnp.float32)) * (hd ** -0.5)
+    m = _mask(qpos, kpos, causal, window)                 # (Lq, Lk)
+    if kv_valid is not None:
+        kv_valid = jnp.asarray(kv_valid)
+        if kv_valid.ndim == 1:
+            m = m & kv_valid[None, :]
+            s = jnp.where(m[None, None], s, NEG_INF)
+        else:
+            mm = m[None, None] & kv_valid[:, None, None, :]
+            s = jnp.where(mm, s, NEG_INF)
+    else:
+        s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, ve.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0, chunk: int = 1024) -> jax.Array:
+    """Memory-bounded blocked attention. Small sequences take the quadratic
+    path; larger ones the two-level-blocked custom-VJP flash implementation
+    (repro.models.flash) whose backward recomputes probability blocks —
+    O(L) residuals instead of O(L^2)."""
+    lq, lk = q.shape[1], k.shape[1]
+    if lk <= 2 * chunk:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              qpos=q_offset + jnp.arange(lq))
+    from repro.models.flash import flash_attention as _flash
+    return _flash(q, k, v, causal, window, q_offset, 0,
+                  min(chunk, lq), chunk)
+
+
+# ---------------------------------------------------------------------------
+# GQA projection layer
+# ---------------------------------------------------------------------------
+
+def init_attn(key: jax.Array, cfg: ModelConfig, dtype,
+              out_scale: float = 1.0) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(kq, (d, h, hd), dtype) * s,
+        "wk": jax.random.normal(kk, (d, kv, hd), dtype) * s,
+        "wv": jax.random.normal(kv_, (d, kv, hd), dtype) * s,
+        "wo": jax.random.normal(ko, (h, hd, d), dtype) * ((h * hd) ** -0.5) * out_scale,
+    }
+
+
+def attn_qkv(p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    xc = x.astype(p["wq"].dtype)
+    q = jnp.einsum("bld,dhk->blhk", xc, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", xc, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", xc, p["wv"])
+    return q, k, v
+
+
+def attn_out(p: Params, o: jax.Array, x_dtype) -> jax.Array:
+    return jnp.einsum("blhk,hkd->bld", o.astype(p["wo"].dtype),
+                      p["wo"]).astype(x_dtype)
+
+
+def self_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                   causal: bool = True, window: int = 0, q_offset: int = 0,
+                   use_rope: bool = True, chunk: int = 1024) -> jax.Array:
+    q, k, v = attn_qkv(p, x)
+    if use_rope:
+        pos = q_offset + jnp.arange(x.shape[1])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset, chunk=chunk)
+    return attn_out(p, o, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches (decode)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype) -> Params:
+    """Full cache, or ring buffer when the layer uses sliding-window."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, kv, hd), dtype),
+    }
+
+
+def init_ring_cache(cfg: ModelConfig, batch: int, window: int,
+                    dtype) -> Params:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, window, kv, hd), dtype),
+        "v": jnp.zeros((batch, window, kv, hd), dtype),
+        "pos": jnp.full((window,), -1, jnp.int32),   # absolute position per slot
+    }
+
+
+def decode_self_attention(p: Params, x: jax.Array, cache: Params,
+                          cfg: ModelConfig, index: jax.Array, *,
+                          window: int = 0, use_rope: bool = True
+                          ) -> Tuple[jax.Array, Params]:
+    """One-token decode. x: (B, 1, d); ``index`` = absolute position of the
+    new token. Ring-buffer cache when `window`>0 (cache length == window),
+    else full cache written at `index`."""
+    q, k, v = attn_qkv(p, x)
+    if use_rope:
+        pos = jnp.asarray(index)[None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k = k.astype(cache["k"].dtype)
+    v = v.astype(cache["v"].dtype)
+    if window > 0 and cache["k"].shape[1] == window:
+        slot = jnp.mod(index, window)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                            jnp.asarray(index)[None].astype(jnp.int32),
+                                            (slot,))
+        valid = (cpos >= 0) & (cpos > index - window) & (cpos <= index)
+        o = full_attention(q, ck, cv, causal=False, qpos=jnp.asarray(index)[None],
+                           kpos=jnp.maximum(cpos, 0), kv_valid=valid)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, index, 0, 0))
+        s = ck.shape[1]
+        kpos = jnp.arange(s)
+        valid = kpos <= index
+        o = full_attention(q, ck, cv, causal=False, qpos=jnp.asarray(index)[None],
+                           kpos=kpos, kv_valid=valid)
+        new_cache = {"k": ck, "v": cv}
+    return attn_out(p, o, x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec, VLM)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key: jax.Array, cfg: ModelConfig, dtype,
+                    kv_dim: Optional[int] = None,
+                    out_scale: float = 1.0) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim_
+    kvd = kv_dim or d
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    return {
+        "wq": jax.random.normal(kq, (d, h, hd), dtype) * (d ** -0.5),
+        "wk": jax.random.normal(kk, (kvd, h, hd), dtype) * (kvd ** -0.5),
+        "wv": jax.random.normal(kv_, (kvd, h, hd), dtype) * (kvd ** -0.5),
+        "wo": jax.random.normal(ko, (h, hd, d), dtype) * ((h * hd) ** -0.5) * out_scale,
+    }
+
+
+def make_cross_kv(p: Params, kv_src: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bld,dhk->blhk", kv_src.astype(p["wk"].dtype), p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", kv_src.astype(p["wv"].dtype), p["wv"])
+    return k, v
+
+
+def cross_attention_kv(p: Params, x: jax.Array, k: jax.Array,
+                       v: jax.Array) -> jax.Array:
+    q = jnp.einsum("bld,dhk->blhk", x.astype(p["wq"].dtype), p["wq"])
+    o = full_attention(q, k, v, causal=False)
+    return attn_out(p, o, x.dtype)
+
+
+def cross_attention(p: Params, x: jax.Array, kv_src: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """x: (B, Lq, d) queries; kv_src: (B, Lk, kv_dim) encoder/image states."""
+    k, v = make_cross_kv(p, kv_src)
+    return cross_attention_kv(p, x, k, v)

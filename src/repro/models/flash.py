@@ -1,0 +1,217 @@
+"""Memory-bounded flash attention in pure JAX with a custom VJP.
+
+Two-level blocking: outer scan over query chunks, inner scan over KV
+chunks, online softmax. The backward recomputes attention probabilities
+per (q-chunk, kv-chunk) block from the saved logsumexp — O(L) residual
+memory instead of O(L^2) (differentiating through the naive online-softmax
+scan would otherwise stash every per-chunk probability block).
+
+Supports: causal masking, sliding window, GQA (KV heads < Q heads),
+absolute position offsets. This is also the jnp oracle for the Pallas
+flash kernels in repro/kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_axis(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg), pad
+
+
+def _block_mask(qpos, kpos, causal, window, lk_real):
+    m = (kpos[None, :] < lk_real) & (kpos[None, :] >= 0)
+    m = jnp.broadcast_to(m, (qpos.shape[0], kpos.shape[0]))
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, kv_offset: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024):
+    """q: (B, Lq, H, hd); k, v: (B, Lk, KV, hd). Returns (B, Lq, H, hd)."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_offset,
+                             q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_offset,
+                    q_chunk, kv_chunk):
+    b, lq, h, hd = q.shape
+    lk, kv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]                  # may differ from hd (e.g. MLA 192/128)
+    rep = h // kv
+    scale = hd ** -0.5
+    qp, _ = _pad_axis(q, q_chunk, 1)
+    kp, _ = _pad_axis(k, kv_chunk, 1)
+    vp, _ = _pad_axis(v, kv_chunk, 1)
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    qc = qp.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = kp.reshape(b, nk, kv_chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, kv_chunk, kv, hdv).transpose(1, 0, 2, 3, 4)
+
+    def q_block(qi_and_idx):
+        qi, i = qi_and_idx
+        qf = qi.astype(jnp.float32) * scale
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, xs):
+            m, l, acc = carry
+            j, kj, vj = xs
+            kj = jnp.repeat(kj, rep, 2).astype(jnp.float32)
+            vj = jnp.repeat(vj, rep, 2).astype(jnp.float32)
+            kpos = kv_offset + j * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj)
+            mask = _block_mask(qpos, kpos, causal, window, kv_offset + lk)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd",
+                                                         p, vj)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hdv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 2, 1, 3), lse          # (B,Cq,H,hd), (B,H,Cq)
+
+    outs, lses = jax.lax.map(q_block, (qc, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, h, hdv)[:, :lq]
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, nq * q_chunk)[:, :, :lq]
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, kv_offset, q_chunk,
+               kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_offset,
+                               q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, kv_offset, q_chunk, kv_chunk,
+               res, do):
+    q, k, v, out, lse = res
+    b, lq, h, hd = q.shape
+    lk, kvh = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    rep = h // kvh
+    scale = hd ** -0.5
+    delta = jnp.einsum("blhd,blhd->bhl", do.astype(jnp.float32),
+                       out.astype(jnp.float32))            # (B,H,Lq)
+    qp, _ = _pad_axis(q, q_chunk, 1)
+    dop, _ = _pad_axis(do, q_chunk, 1)
+    lsep, _ = _pad_axis(lse, q_chunk, 2)
+    dlt, _ = _pad_axis(delta, q_chunk, 2)
+    kp, _ = _pad_axis(k, kv_chunk, 1)
+    vp, _ = _pad_axis(v, kv_chunk, 1)
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    qc = qp.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    doc = dop.reshape(b, nq, q_chunk, h, hdv).transpose(1, 0, 2, 3, 4)
+    lsec = lsep.reshape(b, h, nq, q_chunk).transpose(2, 0, 1, 3)
+    dltc = dlt.reshape(b, h, nq, q_chunk).transpose(2, 0, 1, 3)
+    kc = kp.reshape(b, nk, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, kv_chunk, kvh, hdv).transpose(1, 0, 2, 3, 4)
+
+    def q_step(carry, xs):
+        dk_acc, dv_acc = carry                              # (nk,B,Ck,KV,hd)
+        qi, doi, lsei, dlti, i = xs
+        qf = qi.astype(jnp.float32)
+        dof = doi.astype(jnp.float32)
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(dq_acc, xs2):
+            j, kj, vj, dkj, dvj = xs2
+            ke = jnp.repeat(kj, rep, 2).astype(jnp.float32)
+            ve = jnp.repeat(vj, rep, 2).astype(jnp.float32)
+            kpos = kv_offset + j * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf * scale, ke)
+            mask = _block_mask(qpos, kpos, causal, window, kv_offset + lk)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])                # (B,H,Cq,Ck)
+            dve = jnp.einsum("bhqk,bqhd->bkhd", p, dof)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", dof, ve)
+            ds = p * (dp - dlti[..., None]) * scale
+            dq_new = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds, ke)
+            dke = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+            # collapse expanded heads back to KV heads
+            dkj = dkj + dke.reshape(b, kv_chunk, kvh, rep, hd).sum(3)
+            dvj = dvj + dve.reshape(b, kv_chunk, kvh, rep, hdv).sum(3)
+            return dq_new, (dkj, dvj)
+
+        dq0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+        dqi, (dk_new, dv_new) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(nk), kc, vc, dk_acc, dv_acc))
+        return (dk_new, dv_new), dqi
+
+    dk0 = jnp.zeros((nk, b, kv_chunk, kvh, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kv_chunk, kvh, hdv), jnp.float32)
+    (dkc, dvc), dqc = jax.lax.scan(
+        q_step, (dk0, dv0), (qc, doc, lsec, dltc, jnp.arange(nq)))
+    dq = dqc.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, h, hd)[:, :lq]
+    dk = dkc.transpose(1, 0, 2, 3, 4).reshape(b, nk * kv_chunk, kvh, hd)[:, :lk]
+    dv = dvc.transpose(1, 0, 2, 3, 4).reshape(b, nk * kv_chunk, kvh, hdv)[:, :lk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def banded_flash_attention(q, k, v, window: int, q_offset: int = 0,
+                           q_chunk: int = 1024, kv_chunk: int = 512,
+                           use_full: bool = False):
+    """Causal sliding-window attention with BLOCK SKIPPING: each query chunk
+    only visits its key band [chunk_start - wpad, chunk_end), so compute is
+    O(L * (window + q_chunk)) instead of the masked O(L^2) of plain flash.
+    Gradients flow through the per-band flash custom-VJP (O(band) residuals
+    per chunk)."""
+    b, lq, h, hd = q.shape
+    lk = k.shape[1]
+    assert q_chunk % kv_chunk == 0
+    wpad = -(-window // kv_chunk) * kv_chunk
+    qp, _ = _pad_axis(q, q_chunk, 1)
+    nq = qp.shape[1] // q_chunk
+    # front-pad by wpad (masked via kpos<0), back-pad to cover query padding
+    back = max(0, nq * q_chunk - lk)
+    kp = jnp.pad(k, ((0, 0), (wpad, back), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (wpad, back), (0, 0), (0, 0)))
+    band = wpad + q_chunk
+
+    outs = []
+    for i in range(nq):          # nq static; offsets stay static for the vjp
+        qi = qp[:, i * q_chunk:(i + 1) * q_chunk]
+        ks = kp[:, i * q_chunk:i * q_chunk + band]
+        vs = vp[:, i * q_chunk:i * q_chunk + band]
+        if use_full:             # cost-accounting mode: exact FLOP counting
+            from repro.models.attention import full_attention
+            qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            kpos = q_offset + i * q_chunk - wpad + jnp.arange(band)
+            outs.append(full_attention(qi, ks, vs, causal=True,
+                                       window=window, qpos=qpos, kpos=kpos))
+        else:
+            outs.append(flash_attention(qi, ks, vs, True, window,
+                                        q_offset + i * q_chunk,
+                                        q_offset + i * q_chunk - wpad,
+                                        q_chunk, kv_chunk))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :lq]

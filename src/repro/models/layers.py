@@ -1,0 +1,106 @@
+"""Basic layers: norms, embeddings, RoPE, dense FFN. Functional style:
+``init_*`` builds a param pytree, ``*_apply`` consumes it."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype) * (d ** -0.5)
+
+
+def embed_apply(embed: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(embed, ids, axis=0)
+
+
+def sinusoidal_pos(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2).astype(jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d - d // 2)]))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, hd); positions: (L,) or (..., L)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                          # (..., L, 1, hd/2)
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (the non-MoE sub-layer; also the "shared expert" body)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key: jax.Array, d: int, dff: int, cfg: ModelConfig, dtype,
+             out_scale: float = 1.0) -> Params:
+    k_i, k_g, k_o = jax.random.split(key, 3)
+    p = {
+        "w_in": jax.random.normal(k_i, (d, dff), dtype) * (d ** -0.5),
+        "w_out": jax.random.normal(k_o, (dff, d), dtype) * (dff ** -0.5) * out_scale,
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = jax.random.normal(k_g, (d, dff), dtype) * (d ** -0.5)
+    return p
+
+
+def ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xc = x.astype(p["w_in"].dtype)
+    h = xc @ p["w_in"]
+    if cfg.gated_mlp:
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(xc @ p["w_gate"]) * h
+    else:
+        h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+    return (h @ p["w_out"]).astype(x.dtype)

@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Low-rank joint compression of K/V into a latent c_kv plus a decoupled
+shared RoPE key. Decode uses the ABSORBED formulation: the up-projections
+are folded into the query/output so the per-step cost reads only the
+compressed cache (B, S, kv_lora + rope_dim) — the reason MLA's decode
+memory term is ~an order of magnitude below GQA at the same head count.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig, dtype,
+             out_scale: float = 1.0) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "w_dq": jax.random.normal(k1, (d, m.q_lora_rank), dtype) * d ** -0.5,
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": jax.random.normal(k2, (m.q_lora_rank, h, dn + dr), dtype)
+                * m.q_lora_rank ** -0.5,
+        "w_dkv": jax.random.normal(k3, (d, m.kv_lora_rank + dr), dtype) * d ** -0.5,
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_ukv": jax.random.normal(k4, (m.kv_lora_rank, h, dn + dv), dtype)
+                 * m.kv_lora_rank ** -0.5,
+        "wo": jax.random.normal(k5, (h, dv, d), dtype)
+              * ((h * dv) ** -0.5) * out_scale,
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_q(p: Params, x: jax.Array, cfg: ModelConfig, pos: jax.Array):
+    m = cfg.mla
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cq = _rms(x.astype(p["w_dq"].dtype) @ p["w_dq"], p["q_norm"])
+    q = jnp.einsum("blc,chk->blhk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p: Params, x: jax.Array, cfg: ModelConfig, pos: jax.Array):
+    """x -> (c_kv normed (B,L,c), k_rope roped (B,L,dr)). This pair IS the cache."""
+    m = cfg.mla
+    ckv_full = x.astype(p["w_dkv"].dtype) @ p["w_dkv"]
+    c_kv = _rms(ckv_full[..., :m.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(ckv_full[..., None, m.kv_lora_rank:], pos,
+                        cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  q_offset: int = 0, chunk: int = 2048,
+                  return_cache: bool = False):
+    """Training/prefill path: decompress K/V and run standard causal MHA
+    (chunked over KV to stay memory-bounded)."""
+    m = cfg.mla
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    pos = q_offset + jnp.arange(l)
+    q_nope, q_rope = _project_q(p, x, cfg, pos)
+    c_kv, k_rope = _compress_kv(p, x, cfg, pos)
+    kv = jnp.einsum("blc,chk->blhk", c_kv, p["w_ukv"])
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :], (b, l, h, dr))], -1)
+    from repro.models.attention import flash_attention
+    o = flash_attention(q, k, v, causal=True, q_offset=q_offset, chunk=chunk)
+    y = jnp.einsum("blhv,hvd->bld", o.astype(p["wo"].dtype),
+                   p["wo"]).astype(x.dtype)
+    if return_cache:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+               index: jax.Array) -> Tuple[jax.Array, Params]:
+    """Absorbed one-token decode against the compressed cache."""
+    m = cfg.mla
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    pos = jnp.asarray(index)[None]
+    q_nope, q_rope = _project_q(p, x, cfg, pos)            # (B,1,H,dn/(dr))
+    c_new, kr_new = _compress_kv(p, x, cfg, pos)           # (B,1,c), (B,1,dr)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0))
+    # absorb W_ukv(K) into the query
+    w_k = p["w_ukv"][..., :dn]                             # (c, H, dn)
+    w_v = p["w_ukv"][..., dn:]                             # (c, H, dv)
+    q_abs = jnp.einsum("blhn,chn->blhc", q_nope, w_k)      # (B,1,H,c)
+    s = (jnp.einsum("blhc,bsc->bhls", q_abs.astype(jnp.float32),
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("blhr,bsr->bhls", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * ((dn + dr) ** -0.5)
+    smax = c_kv.shape[1]
+    valid = jnp.arange(smax) <= index
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhls,bsc->blhc", w, c_kv.astype(jnp.float32))
+    o = jnp.einsum("blhc,chv->blhv", lat, w_v.astype(jnp.float32))
+    y = jnp.einsum("blhv,hvd->bld", o.astype(p["wo"].dtype), p["wo"])
+    return y.astype(x.dtype), {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward (block decomposition: intra-chunk quadratic part +
+inter-chunk linear state recurrence) and O(1)-state decode recurrence.
+The naive full recurrence lives in tests as the oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, dtype,
+             out_scale: float = 1.0) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    h = din // s.head_dim
+    gn = s.n_groups * s.d_state
+    conv_ch = din + 2 * gn
+    ks = jax.random.split(key, 8)
+    sd = d ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d, din), dtype) * sd,
+        "w_x": jax.random.normal(ks[1], (d, din), dtype) * sd,
+        "w_B": jax.random.normal(ks[2], (d, gn), dtype) * sd,
+        "w_C": jax.random.normal(ks[3], (d, gn), dtype) * sd,
+        "w_dt": jax.random.normal(ks[4], (d, h), dtype) * sd,
+        "dt_bias": jnp.zeros((h,), dtype) + jnp.log(jnp.expm1(jnp.asarray(0.01, dtype))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "D": jnp.ones((h,), dtype),
+        "conv_w": jax.random.normal(ks[5], (s.conv_kernel, conv_ch), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "out_norm": jnp.ones((din,), dtype),
+        "w_out": jax.random.normal(ks[6], (din, d), dtype) * (din ** -0.5) * out_scale,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    return (yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + eps)
+            * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, bs: jax.Array,
+                cs: jax.Array, chunk: int,
+                h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. xh: (B,L,H,P); dt: (B,L,H); a: (H,) negative;
+    bs, cs: (B,L,G,N). Returns y (B,L,H,P) and final state (B,H,P,N)."""
+    b, l, h, p = xh.shape
+    g, n = bs.shape[2], bs.shape[3]
+    rep = h // g
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xc = xh.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = jnp.repeat(bs.reshape(b, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(cs.reshape(b, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    da = dtc * a.astype(jnp.float32)                      # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                          # within-chunk cumsum
+    # ---- intra-chunk (quadratic within chunk) ----
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc)     # (B,nc,Q,Q,H)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    att = jnp.where(causal, scores * decay, 0.0) * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+    # ---- chunk states ----
+    last = cum[:, :, -1:, :]                              # (B,nc,1,H)
+    w_state = jnp.exp(last - cum) * dtc                   # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", bc, w_state, xc)
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])               # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(hprev, xs):
+        dec, s_c = xs                                     # (B,H), (B,H,P,N)
+        hnew = hprev * dec[..., None, None] + s_c
+        return hnew, hprev
+
+    hfin, h_in = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N) state entering chunk
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", cc, h_in, jnp.exp(cum))
+    y = (y_diag + y_inter).reshape(b, l, h, p)
+    return y.astype(xh.dtype), hfin
+
+
+def ssm_apply(prm: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba-2 mixer (train / prefill)."""
+    s = cfg.ssm
+    b, l, d = x.shape
+    din = s.d_inner(d)
+    h = din // s.head_dim
+    gn = s.n_groups * s.d_state
+    xc = x.astype(prm["w_z"].dtype)
+    z = xc @ prm["w_z"]
+    xbc = jnp.concatenate([xc @ prm["w_x"], xc @ prm["w_B"], xc @ prm["w_C"]], -1)
+    xbc = jax.nn.silu(_causal_conv(xbc, prm["conv_w"], prm["conv_b"]))
+    xs = xbc[..., :din].reshape(b, l, h, s.head_dim)
+    bs = xbc[..., din:din + gn].reshape(b, l, s.n_groups, s.d_state)
+    cs = xbc[..., din + gn:].reshape(b, l, s.n_groups, s.d_state)
+    dt = jax.nn.softplus((xc @ prm["w_dt"]).astype(jnp.float32)
+                         + prm["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(prm["A_log"].astype(jnp.float32))
+    pad = (-l) % s.chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bs = jnp.pad(bs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cs = jnp.pad(cs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, _ = ssd_chunked(xs, dt, a, bs, cs, s.chunk)
+    y = y[:, :l]
+    y = y + prm["D"].astype(y.dtype)[None, None, :, None] * xs[:, :l].astype(y.dtype)
+    y = _gated_norm(y.reshape(b, l, din), z, prm["out_norm"])
+    return (y @ prm["w_out"]).astype(x.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    h = din // s.head_dim
+    gn = s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, din + 2 * gn), dtype),
+        "h": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(prm: Params, x: jax.Array, cache: Params,
+               cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    s = cfg.ssm
+    b, _, d = x.shape
+    din = s.d_inner(d)
+    h = din // s.head_dim
+    gn = s.n_groups * s.d_state
+    xc = x[:, 0].astype(prm["w_z"].dtype)
+    z = xc @ prm["w_z"]
+    xbc_new = jnp.concatenate([xc @ prm["w_x"], xc @ prm["w_B"], xc @ prm["w_C"]], -1)
+    win = jnp.concatenate([cache["conv"],
+                           xbc_new[:, None].astype(cache["conv"].dtype)], 1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, prm["conv_w"]) + prm["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[:, :din].reshape(b, h, s.head_dim)
+    bs = jnp.repeat(xbc[:, din:din + gn].reshape(b, s.n_groups, s.d_state),
+                    h // s.n_groups, axis=1)
+    cs = jnp.repeat(xbc[:, din + gn:].reshape(b, s.n_groups, s.d_state),
+                    h // s.n_groups, axis=1)
+    dt = jax.nn.softplus((xc @ prm["w_dt"]).astype(jnp.float32)
+                         + prm["dt_bias"].astype(jnp.float32))    # (B,H)
+    a = -jnp.exp(prm["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                         # (B,H)
+    hn = (cache["h"] * dec[..., None, None]
+          + jnp.einsum("bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32),
+                       bs.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", cs.astype(jnp.float32), hn)
+    y = y + prm["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = _gated_norm(y.reshape(b, din).astype(x.dtype), z, prm["out_norm"])
+    out = (y @ prm["w_out"]).astype(x.dtype)[:, None]
+    return out, {"conv": win[:, 1:], "h": hn.astype(cache["h"].dtype)}

@@ -1,0 +1,3 @@
+from repro.optim.adam import adam_init, adam_update, global_norm, schedule
+
+__all__ = ["adam_init", "adam_update", "global_norm", "schedule"]

@@ -1,0 +1,83 @@
+"""Adam optimizer + LR schedules, pure-pytree implementation.
+
+Paper settings (§4.1): Adam, beta1=0.9, beta2=0.99, lr=0.03 with 5000
+warmup steps and an inverse-square-root decay (Raffel et al., 2019).
+``moment_dtype="bfloat16"`` halves optimizer memory for the huge archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Params = Any
+OptState = Dict[str, Any]
+
+
+def schedule(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    w = float(max(tc.warmup_steps, 1))
+    if tc.schedule == "inverse_sqrt":
+        warm = s / w
+        decay = jnp.sqrt(w / jnp.maximum(s, w))
+        return tc.lr * jnp.minimum(warm, decay)
+    if tc.schedule == "cosine":
+        warm = jnp.minimum(s / w, 1.0)
+        t = jnp.clip((s - w) / max(tc.steps - w, 1), 0.0, 1.0)
+        return tc.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.asarray(tc.lr, jnp.float32)
+
+
+def adam_init(params: Params, tc: TrainConfig) -> OptState:
+    mdt = jnp.dtype(tc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adam_update(grads: Params, opt: OptState, params: Params,
+                tc: TrainConfig) -> Tuple[Params, OptState, Dict]:
+    step = opt["step"] + 1
+    lr = schedule(step, tc)
+    gnorm = global_norm(grads)
+    if tc.grad_clip > 0:
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(tc.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mn = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vn = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = mn / bc1
+        vh = vn / bc2
+        delta = lr * mh / (jnp.sqrt(vh) + tc.eps)
+        if tc.weight_decay > 0:
+            delta = delta + lr * tc.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                mn.astype(mdt), vn.astype(mdt))
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     state_specs, to_shardings, tree_specs)
+
+__all__ = ["batch_specs", "cache_specs", "param_specs", "state_specs",
+           "to_shardings", "tree_specs"]

@@ -1,0 +1,44 @@
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_py(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run python code in a subprocess with N simulated CPU devices.
+    Multi-device tests must run out-of-process because jax locks the device
+    count at first init."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+def make_batch(cfg, key, B=2, L=33):
+    batch = {"tokens": jax.random.randint(key, (B, L), 3, cfg.vocab)}
+    if cfg.vlm is not None:
+        batch["img_embeds"] = jax.random.normal(
+            key, (B, cfg.vlm.n_image_tokens, cfg.vlm.d_image))
+    if cfg.encdec is not None:
+        if cfg.encdec.frontend == "stub":
+            batch["frames"] = jax.random.normal(
+                key, (B, cfg.encdec.encoder_seq, cfg.d_model))
+        else:
+            batch["enc_tokens"] = jax.random.randint(key, (B, 32), 3, cfg.vocab)
+    return batch
+
+
+def train_batch(cfg, key, B=2, L=32):
+    b = make_batch(cfg, key, B, L)
+    b["labels"] = jnp.roll(b["tokens"], -1, axis=1)
+    b["loss_mask"] = jnp.ones((B, L), jnp.float32)
+    return b

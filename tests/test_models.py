@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (reduced configs) + decode==forward checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, train_batch
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.configs.base import TrainConfig
+from repro.models import (decode_step, init_model, layer_plan, model_apply,
+                          prefill)
+from repro.training import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced variant (<=2 layers, d<=256, <=4 experts): one forward and one
+    train step on CPU; shape + finiteness assertions."""
+    cfg = reduced(get_config(arch))
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    params = init_model(KEY, cfg)
+    B, L = 2, 32
+    batch = train_batch(cfg, KEY, B, L)
+    logits, aux = model_apply(params, batch, cfg, rng=KEY, decision=None)
+    assert logits.shape == (B, L, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    tc = TrainConfig(lr=1e-3, warmup_steps=10)
+    state = init_train_state(params, tc)
+    step = make_train_step(cfg, tc, jit=False)
+    state, m = step(state, batch, None)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    assert float(m["grad_norm"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    params = init_model(KEY, cfg)
+    B, L = 2, 17
+    batch = make_batch(cfg, KEY, B, L)
+    full, _ = model_apply(params, batch, cfg, decision=None,
+                          is_training=False)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :L - 1]
+    lg, caches = prefill(params, pre, cfg, max_seq=32)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, L - 2]), atol=2e-4)
+    lg2, _ = decode_step(params, caches, batch["tokens"][:, L - 1:L],
+                         L - 1, cfg)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]),
+                               np.asarray(full[:, L - 1]), atol=2e-4)
+
+
+def test_multi_token_decode_chain():
+    """Decode 8 tokens sequentially == teacher-forced forward."""
+    cfg = reduced(get_config("yi-6b"))
+    params = init_model(KEY, cfg)
+    B, L, n = 2, 24, 8
+    batch = make_batch(cfg, KEY, B, L)
+    full, _ = model_apply(params, batch, cfg, decision=None,
+                          is_training=False)
+    pre = {"tokens": batch["tokens"][:, :L - n]}
+    _, caches = prefill(params, pre, cfg, max_seq=32)
+    for i in range(n):
+        pos = L - n + i
+        lg, caches = decode_step(params, caches,
+                                 batch["tokens"][:, pos:pos + 1], pos, cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, pos]), atol=3e-4)
+
+
+def test_layer_plan_compression():
+    # dense: one segment
+    assert len(layer_plan(reduced(get_config("yi-6b")))) == 1
+    # deepseek: dense prefix + moe run
+    segs = layer_plan(get_config("deepseek-v3-671b"))
+    assert len(segs) == 2
+    assert segs[0].repeats == 3 and not segs[0].pattern[0].moe
+    assert segs[1].repeats == 58 and segs[1].pattern[0].moe
+    # vlm: periodic [cross, self x4]
+    segs = layer_plan(get_config("llama-3.2-vision-90b"))
+    assert len(segs) == 1 and len(segs[0].pattern) == 5
+    assert segs[0].pattern[0].gated_cross and segs[0].repeats == 20
+    # hymba: 3 global layers split the stack into 5 segments
+    segs = layer_plan(get_config("hymba-1.5b"))
+    assert sum(s.repeats * len(s.pattern) for s in segs) == 32
+    # total layer counts always preserved
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        segs = layer_plan(cfg)
+        assert sum(s.repeats * len(s.pattern) for s in segs) == cfg.n_layers
+
+
+def test_sliding_window_attention_limits_context():
+    """Token far beyond the window must not influence logits."""
+    cfg = reduced(get_config("h2o-danube-3-4b"), sliding_window=8)
+    params = init_model(KEY, cfg)
+    B, L = 1, 32
+    t1 = jax.random.randint(KEY, (B, L), 3, cfg.vocab)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 7) % cfg.vocab)   # mutate token 0
+    l1, _ = model_apply(params, {"tokens": t1}, cfg, is_training=False)
+    l2, _ = model_apply(params, {"tokens": t2}, cfg, is_training=False)
+    # with 2 layers x window 8, receptive field < 16: last logits equal
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               atol=1e-5)
+    assert np.abs(np.asarray(l1[:, 0] - l2[:, 0])).max() > 1e-3
+
+
+def test_mtp_aux_present_for_deepseek():
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    assert cfg.mtp
+    params = init_model(KEY, cfg)
+    batch = train_batch(cfg, KEY)
+    _, aux = model_apply(params, batch, cfg, rng=KEY, is_training=True,
+                         return_hidden=True)
+    assert "mtp_hidden" in aux

@@ -1,0 +1,148 @@
+"""Router unit + property tests (dispatch/combine round-trip, balance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core import router as R
+
+
+def _route(T=64, E=8, k=2, d=16, router="softmax", seed=0, jitter=0.0):
+    moe = MoEConfig(n_experts=E, top_k=k, router_type=router,
+                    jitter_eps=jitter)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (T, d))
+    wr = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, E))
+    tok = jax.random.randint(key, (T,), 0, 1000)
+    rr = R.route(wr, x, moe, is_training=False, token_ids=tok)
+    return moe, x, rr
+
+
+def test_topk_weights_normalized():
+    _, _, rr = _route(k=4)
+    np.testing.assert_allclose(np.asarray(rr.topk_w.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_top1_weight_is_prob():
+    moe, _, rr = _route(k=1)
+    # paper eq (2): combine weight for k=1 is the raw softmax prob
+    assert float(rr.topk_w.max()) < 1.0
+    np.testing.assert_allclose(
+        np.asarray(rr.topk_w[:, 0]),
+        np.asarray(jnp.take_along_axis(rr.probs, rr.topk_idx, 1)[:, 0]),
+        rtol=1e-5)
+
+
+def test_topk_indices_distinct():
+    _, _, rr = _route(k=4)
+    idx = np.asarray(rr.topk_idx)
+    for row in idx:
+        assert len(set(row.tolist())) == len(row)
+
+
+@pytest.mark.parametrize("router", ["softmax", "sigmoid", "hash"])
+def test_roundtrip_exact_when_capacity_ample(router):
+    """capacity >= T => dispatch->combine with weight 1 reconstructs tokens."""
+    moe, x, rr = _route(T=32, E=4, k=1, router=router)
+    rr = rr._replace(topk_w=jnp.ones_like(rr.topk_w))
+    info = R.dispatch_info(rr, 4, cap=32)
+    assert bool(info.keep.all())
+    buf = R.dispatch(x, info, 4, 32)
+    y = R.combine(buf, info)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-5)
+
+
+def test_capacity_drops_lowest_priority():
+    moe, x, rr = _route(T=64, E=2, k=1)
+    info = R.dispatch_info(rr, 2, cap=4)
+    # each expert keeps at most 4
+    kept = np.asarray(info.keep[:, 0])
+    idx = np.asarray(rr.topk_idx[:, 0])
+    for e in range(2):
+        assert kept[idx == e].sum() <= 4
+        # priority is token order: kept ones are the first assigned
+        rows = np.where(idx == e)[0]
+        assert kept[rows[:kept[idx == e].sum()]].all()
+
+
+def test_balance_loss_uniform_is_one():
+    E, T = 8, 800
+    moe = MoEConfig(n_experts=E, top_k=1)
+    probs = jnp.full((T, E), 1.0 / E)
+    idx = (jnp.arange(T) % E)[:, None].astype(jnp.int32)
+    rr = R.RouteResult(idx, jnp.ones((T, 1)), probs, jnp.zeros((T, E)))
+    assert abs(float(R.balance_loss(rr, moe)) - 1.0) < 1e-5
+
+
+def test_balance_loss_collapse_is_E():
+    E, T = 8, 128
+    moe = MoEConfig(n_experts=E, top_k=1)
+    probs = jnp.zeros((T, E)).at[:, 0].set(1.0)
+    idx = jnp.zeros((T, 1), jnp.int32)
+    rr = R.RouteResult(idx, jnp.ones((T, 1)), probs, jnp.zeros((T, E)))
+    assert abs(float(R.balance_loss(rr, moe)) - E) < 1e-4
+
+
+def test_hash_router_deterministic_and_gateless():
+    moe, x, rr = _route(router="hash")
+    _, _, rr2 = _route(router="hash")
+    np.testing.assert_array_equal(np.asarray(rr.topk_idx),
+                                  np.asarray(rr2.topk_idx))
+
+
+def test_local_routing_restricted():
+    moe = MoEConfig(n_experts=8, top_k=2, jitter_eps=0.0)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 16))
+    wr = jax.random.normal(key, (16, 8))
+    rr = R.route(wr, x, moe, is_training=False, expert_lo=4, n_local=4)
+    idx = np.asarray(rr.topk_idx)
+    w = np.asarray(rr.topk_w)
+    valid = (idx >= 4) & (idx < 8)
+    assert (w[~valid] < 1e-6).all()
+    assert valid[:, 0].all()      # top choice always local
+    # restricted softmax renormalizes within the local group
+    np.testing.assert_allclose(np.asarray(rr.probs).sum(1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
+       seed=st.integers(0, 10))
+def test_positions_are_valid_ranks(t, e, k, seed):
+    k = min(k, e)
+    moe = MoEConfig(n_experts=e, top_k=k, jitter_eps=0.0)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, 8))
+    wr = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, e))
+    rr = R.route(wr, x, moe, is_training=False)
+    info = R.dispatch_info(rr, e, cap=t)
+    idx = np.asarray(rr.topk_idx.reshape(-1))
+    pos = np.asarray(info.pos.reshape(-1))
+    # within each expert, positions are 0..count-1 and unique
+    for ee in range(e):
+        pp = np.sort(pos[idx == ee])
+        np.testing.assert_array_equal(pp, np.arange(len(pp)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(8, 48), e=st.sampled_from([2, 4, 8]),
+       cap=st.integers(1, 16), seed=st.integers(0, 5))
+def test_combine_is_masked_weighted_gather(t, e, cap, seed):
+    moe = MoEConfig(n_experts=e, top_k=1, jitter_eps=0.0)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, 8))
+    wr = jax.random.normal(jax.random.PRNGKey(seed + 7), (8, e))
+    rr = R.route(wr, x, moe, is_training=False)
+    info = R.dispatch_info(rr, e, cap)
+    buf = R.dispatch(x, info, e, cap)
+    y = R.combine(buf, info)
+    # dropped tokens must produce exactly zero
+    dropped = ~np.asarray(info.keep[:, 0])
+    assert np.abs(np.asarray(y)[dropped]).max(initial=0.0) == 0.0
+    # kept tokens: y = w * x
+    keptv = np.asarray(info.keep[:, 0])
+    w = np.asarray(rr.topk_w[:, 0])
+    np.testing.assert_allclose(np.asarray(y)[keptv],
+                               (w[:, None] * np.asarray(x))[keptv], rtol=1e-4)

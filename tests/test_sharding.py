@@ -1,0 +1,140 @@
+"""Partition-spec rules: validity on the production mesh (AbstractMesh —
+no devices needed) + a real 8-device end-to-end sharded train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from conftest import run_py
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.configs.base import TrainConfig
+from repro.core.moe import ParallelContext
+from repro.models.model import init_cache, init_model
+from repro.parallel.sharding import cache_specs, param_specs, state_specs
+from repro.training.steps import init_train_state
+
+
+def _abstract_mesh(multi_pod=False):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible_on_production_mesh(arch, multi_pod):
+    """Every sharded dim must be divisible by its mesh-axis size — for the
+    FULL configs on both production meshes."""
+    cfg = get_config(arch)
+    mesh = _abstract_mesh(multi_pod)
+    ctx = ParallelContext(mesh=mesh)
+    shapes = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, ctx, shapes)
+
+    def check(path, leaf, spec):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, specs)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "dbrx-132b"])
+def test_expert_weights_are_expert_parallel(arch):
+    """The paper's layout: expert dim sharded over `data` (EP==DP)."""
+    cfg = get_config(arch)
+    mesh = _abstract_mesh()
+    ctx = ParallelContext(mesh=mesh)
+    shapes = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, ctx, shapes)
+    found = []
+
+    def visit(path, spec):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if "experts" in names and names[-1] == "w_in":
+            found.append(spec)
+
+    jax.tree_util.tree_map_with_path(lambda p, s: visit(p, s), specs)
+    assert found
+    for spec in found:
+        assert spec[1] == "data", spec    # stacked leaf: (repeats, E, d, f)
+        assert spec[3] == "model", spec   # expert d_ff TP (paper footnote 1)
+
+
+def test_cache_specs_decode_batch1_seq_sharded():
+    """long_500k (batch=1): KV/seq sharding falls back sanely."""
+    cfg = get_config("h2o-danube-3-4b")
+    mesh = _abstract_mesh()
+    ctx = ParallelContext(mesh=mesh)
+    shapes = jax.eval_shape(lambda: init_cache(cfg, 1, 4096))
+    specs = cache_specs(cfg, ctx, shapes)
+    leaves = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert leaves  # must produce specs without error
+
+
+def test_state_specs_cover_opt_state():
+    cfg = reduced(get_config("dbrx-132b"))
+    mesh = _abstract_mesh()
+    ctx = ParallelContext(mesh=mesh)
+    tc = TrainConfig()
+    shapes = jax.eval_shape(
+        lambda: init_train_state(init_model(jax.random.PRNGKey(0), cfg), tc))
+    specs = state_specs(cfg, ctx, shapes)
+    # moments share the param layout
+    assert jax.tree_util.tree_structure(specs["opt"]["m"]) == \
+        jax.tree_util.tree_structure(specs["params"])
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    """Full sharded MoE train step on 8 simulated devices == CPU oracle."""
+    out = run_py("""
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.configs.base import TrainConfig, GatingDropoutConfig
+from repro.core.moe import ParallelContext
+from repro.models import init_model
+from repro.parallel.sharding import batch_specs, state_specs, to_shardings
+from repro.training import init_train_state, make_train_step
+
+cfg = reduced(get_config('dbrx-132b'))
+moe = dataclasses.replace(cfg.moe, jitter_eps=0.0)
+cfg = dataclasses.replace(cfg, moe=moe)
+tc = TrainConfig(lr=1e-3, warmup_steps=10, seed=0)
+key = jax.random.PRNGKey(0)
+B, L = 8, 32
+batch = {'tokens': jax.random.randint(key, (B, L), 3, cfg.vocab)}
+batch['labels'] = jnp.roll(batch['tokens'], -1, 1)
+batch['loss_mask'] = jnp.ones((B, L), jnp.float32)
+
+params = init_model(key, cfg)
+state_cpu = init_train_state(params, tc)
+step_cpu = make_train_step(cfg, tc, None)
+_, m_cpu = step_cpu(state_cpu, batch, False)
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+ctx = ParallelContext(mesh=mesh)
+state = init_train_state(init_model(key, cfg), tc)
+st_specs = to_shardings(mesh, state_specs(cfg, ctx, jax.eval_shape(lambda: state)))
+b_specs = to_shardings(mesh, batch_specs(cfg, ctx, batch))
+state = jax.device_put(state, st_specs)
+batch = jax.device_put(batch, b_specs)
+step = jax.jit(make_train_step(cfg, tc, ctx, jit=False),
+               in_shardings=(st_specs, b_specs), static_argnums=(2,),
+               out_shardings=(st_specs, None))
+_, m = step(state, batch, False)
+d = abs(float(m['loss']) - float(m_cpu['loss']))
+print('loss_diff', d)
+# CPU oracle routes over ONE capacity group; the 4-way EP shards route over
+# four smaller groups, so capacity-boundary token drops differ slightly —
+# a real semantic difference, not a numerics bug. Allow <1% of loss.
+assert d < 0.07, d
+print('OK')
+""")
+    assert "OK" in out

@@ -1,0 +1,73 @@
+"""Mamba-2 SSD: chunked == naive recurrence; decode == prefill state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import init_model, model_apply
+from repro.models.ssm import (init_ssm, init_ssm_cache, ssd_chunked,
+                              ssm_apply, ssm_decode)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_ssd(xh, dt, a, bs, cs):
+    b, l, h, p = xh.shape
+    g, n = bs.shape[2], bs.shape[3]
+    rep = h // g
+    be = jnp.repeat(bs, rep, 2)
+    ce = jnp.repeat(cs, rep, 2)
+    hst = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        dec = jnp.exp(dt[:, t] * a)
+        hst = hst * dec[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt[:, t], xh[:, t], be[:, t])
+        ys.append(jnp.einsum("bhn,bhpn->bhp", ce[:, t], hst))
+    return jnp.stack(ys, 1), hst
+
+
+@settings(max_examples=10, deadline=None)
+@given(l=st.sampled_from([16, 32, 48]), chunk=st.sampled_from([8, 16]),
+       h=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
+       seed=st.integers(0, 5))
+def test_ssd_chunked_equals_recurrence(l, chunk, h, g, seed):
+    if h % g:
+        g = 1
+    b, p, n = 2, 8, 8
+    k = jax.random.PRNGKey(seed)
+    xh = jax.random.normal(k, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                           (b, l, h))) * 0.5
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(seed + 2), (h,)) * 0.3)
+    bs = jax.random.normal(jax.random.PRNGKey(seed + 3), (b, l, g, n))
+    cs = jax.random.normal(jax.random.PRNGKey(seed + 4), (b, l, g, n))
+    y, hf = ssd_chunked(xh, dt, a, bs, cs, chunk)
+    y_ref, h_ref = naive_ssd(xh, dt, a, bs, cs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref), atol=2e-4)
+
+
+def test_ssm_decode_continues_prefix():
+    """ssm_apply(x[:, :t+1])[-1] == decode step after prefix state."""
+    cfg = reduced(get_config("mamba2-1.3b"))
+    prm = init_ssm(KEY, cfg, jnp.float32)
+    b, l = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, l, cfg.d_model))
+    y_full = ssm_apply(prm, x, cfg)
+    # build cache from prefix then decode last token
+    from repro.models.transformer import _fill_ssm_cache
+    cache = _fill_ssm_cache(prm, x[:, :l - 1], cfg)
+    y_dec, _ = ssm_decode(prm, x[:, l - 1:], cache, cfg)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]), atol=1e-4)
+
+
+def test_mamba_lm_long_context_state_is_constant_size():
+    cfg = reduced(get_config("mamba2-1.3b"))
+    cache = init_ssm_cache(cfg, batch=1, dtype=jnp.float32)
+    assert cache["h"].shape[0] == 1
+    # O(1) in sequence length by construction (no seq dim in the cache)
+    assert all("seq" not in str(k) for k in cache)
+    assert cache["conv"].shape[1] == cfg.ssm.conv_kernel - 1

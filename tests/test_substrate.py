@@ -1,0 +1,153 @@
+"""Optimizer / data pipeline / checkpoint / metrics tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.base import TrainConfig
+from repro.data import (EOS, MTTaskConfig, MultilingualMT, LMTaskConfig,
+                        SyntheticLM, PAD)
+from repro.metrics import corpus_bleu, strip_special
+from repro.optim import adam_init, adam_update, schedule
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adam_first_step_is_lr_signed():
+    tc = TrainConfig(lr=0.1, warmup_steps=1, schedule="constant",
+                     grad_clip=0.0, eps=1e-12)
+    params = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, -0.25])}
+    opt = adam_init(params, tc)
+    new_p, opt, m = adam_update(g, opt, params, tc)
+    # bias-corrected first step: delta = lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray([1.0 - 0.1, -2.0 + 0.1]), rtol=1e-5)
+
+
+def test_adam_converges_on_quadratic():
+    tc = TrainConfig(lr=0.1, warmup_steps=1, schedule="constant",
+                     grad_clip=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adam_init(params, tc)
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adam_update(g, opt, params, tc)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip_caps_norm():
+    tc = TrainConfig(lr=1.0, warmup_steps=1, schedule="constant",
+                     grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    opt = adam_init(params, tc)
+    _, _, m = adam_update(g, opt, params, tc)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_inverse_sqrt_schedule():
+    tc = TrainConfig(lr=0.03, warmup_steps=5000, schedule="inverse_sqrt")
+    s = lambda t: float(schedule(jnp.asarray(t), tc))
+    assert s(2500) == pytest.approx(0.015, rel=1e-3)       # linear warmup
+    assert s(5000) == pytest.approx(0.03, rel=1e-3)        # peak
+    assert s(20000) == pytest.approx(0.015, rel=1e-3)      # 1/sqrt decay
+    assert s(1) < s(100) < s(5000)
+
+
+def test_bf16_moments_supported():
+    tc = TrainConfig(moment_dtype="bfloat16", schedule="constant")
+    params = {"w": jnp.ones(8)}
+    opt = adam_init(params, tc)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    p2, opt2, _ = adam_update({"w": jnp.ones(8)}, opt, params, tc)
+    assert opt2["v"]["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == params["w"].dtype
+
+
+# ---------------------------------------------------------------- data
+
+def test_mt_deterministic_and_shards_disjoint():
+    task = MultilingualMT(MTTaskConfig(vocab=256, n_langs=4))
+    a = task.sample_batch(3, 16)
+    b = task.sample_batch(3, 16)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    s0 = task.sample_batch(3, 16, shard=0, n_shards=2)
+    s1 = task.sample_batch(3, 16, shard=1, n_shards=2)
+    assert s0["tokens"].shape[0] == 8
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_mt_translation_is_lang_permutation_reversed():
+    task = MultilingualMT(MTTaskConfig(vocab=256, n_langs=4))
+    b = task.sample_batch(0, 8, lang=1)
+    for i in range(8):
+        enc = b["enc_tokens"][i]
+        assert enc[0] == task.lang_tag(1)
+        src = enc[1:list(enc).index(EOS)] - task.first_content
+        expect = task.translate(src, 1) + task.first_content
+        n = int(b["loss_mask"][i].sum()) - 1   # minus EOS slot
+        np.testing.assert_array_equal(b["labels"][i][:n], expect[:n])
+
+
+def test_mt_low_resource_sampling():
+    cfg = MTTaskConfig(vocab=256, n_langs=8, low_resource_weight=0.05)
+    task = MultilingualMT(cfg)
+    langs = np.concatenate([task.sample_batch(s, 64)["lang"]
+                            for s in range(30)])
+    low = np.isin(langs, task.low_langs).mean()
+    assert low < 0.15      # low-resource languages are rare
+
+
+def test_lm_task_learnable_structure():
+    task = SyntheticLM(LMTaskConfig(vocab=128, seq_len=32))
+    b = task.sample_batch(0, 8)
+    assert b["tokens"].shape == (8, 32)
+    # ~90% of transitions follow the chain
+    t, l = b["tokens"], b["labels"]
+    follow = (l == (task.a * t + task.b) % (128 - 3) + 3).mean()
+    assert follow > 0.75
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_bleu_perfect_and_zero():
+    refs = [[3, 4, 5, 6, 7, 8]] * 4
+    assert corpus_bleu(refs, refs) == pytest.approx(100.0, abs=1e-6)
+    assert corpus_bleu([[9, 10, 11, 12, 13, 14]] * 4, refs) < 1.0
+
+
+def test_strip_special():
+    assert strip_special([5, 6, 2, 7, 0]) == [5, 6]
+    assert strip_special([0, 5, 0, 6]) == [5, 6]
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": [jnp.zeros(2), jnp.full((2, 2), 7)]},
+            "step": jnp.asarray(5, jnp.int32)}
+    d = save_checkpoint(str(tmp_path), 42, tree, {"note": "x"})
+    assert os.path.exists(os.path.join(d, "arrays.npz"))
+    template = jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+    restored, meta = restore_checkpoint(str(tmp_path), template)
+    assert meta["step"] == 42 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_pointer(tmp_path):
+    tree = {"w": jnp.ones(3)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, {"w": jnp.full(3, 2.0)})
+    restored, meta = restore_checkpoint(str(tmp_path),
+                                        {"w": jnp.zeros(3)})
+    assert meta["step"] == 2
+    assert float(restored["w"][0]) == 2.0
