@@ -40,6 +40,11 @@ def bench_fig6(fast):
     return main(fast)
 
 
+def bench_table5(fast):
+    from benchmarks.table5_backends import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -78,6 +83,7 @@ BENCHES = {
     "table3": bench_table3,
     "table4": bench_table4,
     "fig6": bench_fig6,
+    "table5": bench_table5,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

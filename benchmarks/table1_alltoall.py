@@ -27,8 +27,8 @@ import json, time
 import jax, jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig, GatingDropoutConfig
 from repro.core import init_moe_params, moe_sharded, ParallelContext
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ('data',))
 ctx = ParallelContext(mesh=mesh)
 cfg = ModelConfig(d_model=512, d_ff=1024, vocab=100, moe=MoEConfig(
     n_experts=8, top_k=1, d_ff_expert=1024,

@@ -1,0 +1,95 @@
+"""Table 5 (beyond paper): MoE execution-backend latency comparison.
+
+Times one MoE layer forward — and the dispatch / expert-FFN / combine
+phases of the pallas pipeline — for each registered backend at the
+zcode_m3 expert shape (reduced widths in fast mode so the CPU container
+finishes). On this container every backend runs on CPU (pallas in
+interpret mode), so the numbers rank *relative* per-phase cost and prove
+the pipeline works end-to-end; on a real TPU pod the same script compares
+compiled-kernel against XLA-collective execution.
+
+Output: benchmarks/artifacts/table5_backends.json
+
+  {"shape": {...}, "backends": {"<name>": {"t_layer_us": float}},
+   "pallas_phases": {"routing_tables_us": ..., "dispatch_us": ...,
+                     "ffn_us": ..., "combine_us": ...}}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks.common import ART, csv_row, timeit
+
+
+def main(fast: bool = True):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.core import get_backend, init_moe_params
+    from repro.core import router as R
+    from repro.kernels import ops as K
+
+    cfg = get_config("zcode-m3-base")
+    if fast:
+        cfg = reduced(cfg)
+        B, L = 8, 64
+    else:
+        B, L = 8, 512
+    moe = cfg.moe
+    p = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, L, cfg.d_model))
+
+    res = {"shape": {"arch": cfg.arch_id, "batch": B, "seq": L,
+                     "d_model": cfg.d_model, "n_experts": moe.n_experts,
+                     "top_k": moe.top_k, "d_ff_expert": moe.d_ff(cfg.d_ff)},
+           "backends": {}, "pallas_phases": {}}
+
+    for name in ("oracle", "pallas", "sharded"):
+        fn = get_backend(name)
+        step = jax.jit(lambda p_, x_: fn(p_, x_, cfg, None, rng=None,
+                                         decision=False, is_training=True,
+                                         token_ids=None)[0])
+        t = timeit(step, p, x, warmup=2, iters=5)
+        res["backends"][name] = {"t_layer_us": t * 1e6}
+        csv_row(f"table5/{name}/layer_fwd", t * 1e6,
+                f"E={moe.n_experts};k={moe.top_k};tokens={B*L}")
+
+    # pallas phase breakdown: routing tables / dispatch / grouped FFN / combine
+    xf = x.reshape(-1, cfg.d_model)
+    T, E = xf.shape[0], moe.n_experts
+    cap = min(R.capacity(T, E, moe.top_k, moe.capacity_factor), T)
+    wr = p["router"]["w"]
+    rr = R.route(wr, xf, moe, is_training=False)
+    info = R.dispatch_info(rr, E, cap)
+    tables = K.routing_tables(info, E, cap)
+    buf = K.dispatch(xf, tables.slot_token, tables.slot_valid)
+    ebuf = buf.reshape(E, cap, -1)
+    ffn = jax.jit(lambda b: K.expert_ffn_op(
+        b, p["experts"]["w_in"], p["experts"].get("w_gate"),
+        p["experts"]["w_out"], cfg.act))
+    out = ffn(ebuf)
+    phases = {
+        "routing_tables_us": timeit(
+            jax.jit(lambda i: K.routing_tables(i, E, cap)), info) * 1e6,
+        "dispatch_us": timeit(
+            lambda: K.dispatch(xf, tables.slot_token, tables.slot_valid)) * 1e6,
+        "ffn_us": timeit(ffn, ebuf) * 1e6,
+        "combine_us": timeit(
+            lambda: K.combine(out.reshape(E * cap, -1), tables.token_slot,
+                              info.topk_w, info.keep)) * 1e6,
+    }
+    res["pallas_phases"] = phases
+    for k, v in phases.items():
+        csv_row(f"table5/pallas/{k[:-3]}", v, f"cap={cap};slots={E*cap}")
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table5_backends.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--full" not in sys.argv)

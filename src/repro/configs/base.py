@@ -69,7 +69,14 @@ class MoEConfig:
     ep_on_model: bool = False           # beyond-paper: expert parallelism over
                                         # data x model (a2a bytes / tp; no TP
                                         # inside experts). Needs E % (dp*tp)==0.
+    # Execution backend (core/backend.py registry, DESIGN.md §6):
+    #   auto | oracle | sharded | pallas
+    backend: str = "auto"
     gating_dropout: GatingDropoutConfig = field(default_factory=GatingDropoutConfig)
+
+    def __post_init__(self):
+        assert self.backend in ("auto", "oracle", "sharded", "pallas"), \
+            self.backend
 
     def d_ff(self, model_d_ff: int) -> int:
         return self.d_ff_expert or model_d_ff

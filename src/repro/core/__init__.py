@@ -5,11 +5,14 @@ from repro.core.gating_dropout import (decision_key, drop_decision,
                                        expected_expert_flop_fraction)
 from repro.core.moe import (ParallelContext, init_moe_params, moe_apply,
                             moe_oracle, moe_param_specs, moe_sharded)
+from repro.core.backend import (available_backends, get_backend,
+                                register_backend, resolve_backend)
 from repro.core import router
 
 __all__ = [
-    "ParallelContext", "decision_key", "drop_decision", "drop_decision_host",
-    "expected_alltoall_fraction", "expected_expert_flop_fraction",
-    "init_moe_params", "moe_apply", "moe_oracle", "moe_param_specs",
-    "moe_sharded", "router",
+    "ParallelContext", "available_backends", "decision_key", "drop_decision",
+    "drop_decision_host", "expected_alltoall_fraction",
+    "expected_expert_flop_fraction", "get_backend", "init_moe_params",
+    "moe_apply", "moe_oracle", "moe_param_specs", "moe_sharded",
+    "register_backend", "resolve_backend", "router",
 ]

@@ -5,15 +5,18 @@ mesh axis (EP group == DP group, as in Switch/DeepSpeed-MoE), tensor
 parallelism of each expert's d_ff over the `model` axis (paper footnote 1),
 pure extra data parallelism over `pod` (experts replicated across pods).
 
-Two numerically-identical implementations:
+Numerically-identical implementations, selected via the execution-backend
+registry (core/backend.py, DESIGN.md §6; ``MoEConfig.backend``):
 
   * ``moe_oracle``   -- pure jnp, `ep` *virtual* shards (vmap). Used on CPU,
                         in tests, and as the ground truth for the sharded path.
   * ``moe_sharded``  -- shard_map over the real mesh; the dispatch/combine
                         all-to-alls are explicit ``jax.lax.all_to_all`` over
                         the `data` axis.
+  * ``pallas``       -- (backend.py) compiled kernel pipeline: fused routing
+                        tables + scalar-prefetch gathers + grouped-FFN.
 
-Both share the same per-shard body (`_shard_fwd`), so equality is by
+All share the same per-shard routing pieces, so equality is by
 construction. Gating Dropout is a per-step global decision:
 
   routed step : route over all E experts -> dispatch -> a2a -> expert FFN
@@ -156,6 +159,37 @@ def _shard_rng(rng, my_shard):
     return None if rng is None else jax.random.fold_in(rng, my_shard)
 
 
+def _routed_aux(rr, info, moe: MoEConfig) -> Dict[str, jax.Array]:
+    """Aux dict for a routed step — shared by every backend so metric
+    semantics cannot desync (DESIGN.md §6)."""
+    return {
+        "balance": R.balance_loss(rr, moe) if moe.router_type != "hash"
+                   else jnp.zeros(()),
+        "router_z": R.router_z_loss(rr) if moe.router_type != "hash"
+                    else jnp.zeros(()),
+        "load": R.expert_load(rr, moe),
+        "dropped_frac": 1.0 - info.keep.mean(),
+    }
+
+
+def _local_adjust(rr, moe: MoEConfig, lo, e_loc: int):
+    """Gate-Drop local-path weight override + validity mask (shared)."""
+    if moe.gating_dropout.local_combine == "one":
+        rr = rr._replace(topk_w=jnp.full_like(rr.topk_w, 1.0 / moe.top_k))
+    # entries that could not be satisfied locally (k > e_loc) are invalid
+    valid = (rr.topk_idx >= lo) & (rr.topk_idx < lo + e_loc) & (rr.topk_w > 0)
+    return rr, valid
+
+
+def _local_aux(rr, info, moe: MoEConfig, T: int) -> Dict[str, jax.Array]:
+    """Aux dict for a Gate-Drop local step (balance only on routed steps);
+    ``rr`` must carry GLOBAL expert ids."""
+    load = jnp.zeros((moe.n_experts,), jnp.float32).at[rr.topk_idx[:, 0]].add(
+        1.0 / T, mode="drop")
+    return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
+            "load": load, "dropped_frac": 1.0 - info.keep.mean()}
+
+
 def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
                   is_training, token_ids, my_shard, ep: int, tp_axis,
                   a2a_axis):
@@ -170,8 +204,11 @@ def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
     info = R.dispatch_info(rr, E, cap)
     from repro.kernels import ops as K
     if K.KERNELS_ENABLED:
-        buf = K.moe_dispatch_op(xf, info, E, cap)
+        # routing tables built once; the combine gather reuses them
+        tables = K.routing_tables(info, E, cap)
+        buf = K.moe_dispatch_op(xf, info, E, cap, tables=tables)
     else:
+        tables = None
         buf = R.dispatch(xf, info, E, cap)                   # (E, cap, d)
     # dispatch all-to-all: (E, cap, d) -> (E/ep, ep*cap, d)
     buf = jax.lax.all_to_all(buf, a2a_axis, split_axis=0, concat_axis=1,
@@ -180,17 +217,9 @@ def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
     # combine all-to-all: (E/ep, ep*cap, d) -> (E, cap, d)
     out = jax.lax.all_to_all(out, a2a_axis, split_axis=1, concat_axis=0,
                              tiled=True)
-    y = (K.moe_combine_op(out, info) if K.KERNELS_ENABLED
+    y = (K.moe_combine_op(out, info, tables=tables) if K.KERNELS_ENABLED
          else R.combine(out, info))
-    aux = {
-        "balance": R.balance_loss(rr, moe) if moe.router_type != "hash"
-                   else jnp.zeros(()),
-        "router_z": R.router_z_loss(rr) if moe.router_type != "hash"
-                    else jnp.zeros(()),
-        "load": R.expert_load(rr, moe),
-        "dropped_frac": 1.0 - info.keep.mean(),
-    }
-    return y, aux
+    return y, _routed_aux(rr, info, moe)
 
 
 def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
@@ -204,10 +233,7 @@ def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
     rr = R.route(wr, xf, moe, rng=_shard_rng(rng, my_shard),
                  is_training=is_training, token_ids=token_ids,
                  expert_lo=lo, n_local=e_loc)
-    if moe.gating_dropout.local_combine == "one":
-        rr = rr._replace(topk_w=jnp.full_like(rr.topk_w, 1.0 / moe.top_k))
-    # entries that could not be satisfied locally (k > e_loc) are invalid
-    valid = (rr.topk_idx >= lo) & (rr.topk_idx < lo + e_loc) & (rr.topk_w > 0)
+    rr, valid = _local_adjust(rr, moe, lo, e_loc)
     rr_local = rr._replace(topk_idx=rr.topk_idx - lo)
     cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
     cap = min(R.capacity(T, e_loc, moe.top_k, cf), T)
@@ -215,15 +241,7 @@ def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
     buf = R.dispatch(xf, info, e_loc, cap)                   # (e_loc, cap, d)
     out = _expert_ffn(experts_loc, buf, cfg, tp_axis)
     y = R.combine(out, info)
-    load = jnp.zeros((E,), jnp.float32).at[rr.topk_idx[:, 0]].add(
-        1.0 / T, mode="drop")
-    aux = {
-        "balance": jnp.zeros(()),        # balance only on routed steps
-        "router_z": jnp.zeros(()),
-        "load": load,
-        "dropped_frac": 1.0 - info.keep.mean(),
-    }
-    return y, aux
+    return y, _local_aux(rr, info, moe, T)
 
 
 def _zero_aux(E: int):
@@ -327,7 +345,7 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
     E = moe.n_experts
     dp = ctx.dp_axes
     all_axes = tuple(mesh.axis_names)
-    # beyond-paper layout (DESIGN/EXPERIMENTS §Perf): EP over data x model.
+    # beyond-paper layout (DESIGN.md §4): EP over data x model.
     # Each device holds E/(dp*tp) whole experts (full d_ff); tokens are
     # additionally sequence-sharded over `model`, so the all-to-all moves
     # 1/tp of the baseline bytes per device and the redundant
@@ -406,9 +424,18 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
         tok_loc = ops[i] if token_ids is not None else None
         return body(wr, experts, x_loc, rng_, dec, tok_loc)
 
-    fn = jax.shard_map(wrapper, mesh=mesh, in_specs=tuple(in_specs),
-                       out_specs=(x_spec, P()), check_vma=False)
+    fn = _shard_map(wrapper, mesh, tuple(in_specs), (x_spec, P()))
     return fn(*args)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (experimental module pre-0.6)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def moe_apply(params: Params, x: jax.Array, cfg: ModelConfig,
@@ -416,10 +443,11 @@ def moe_apply(params: Params, x: jax.Array, cfg: ModelConfig,
               rng: Optional[jax.Array] = None, decision: Decision = None,
               is_training: bool = True,
               token_ids: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
-    """Entry point used by the models: sharded when a real mesh is active,
-    oracle otherwise."""
-    if ctx is not None and ctx.active:
-        return moe_sharded(params, x, cfg, ctx, rng=rng, decision=decision,
-                           is_training=is_training, token_ids=token_ids)
-    return moe_oracle(params, x, cfg, ep=1, rng=rng, decision=decision,
-                      is_training=is_training, token_ids=token_ids)
+    """Entry point used by the models. The execution path is chosen by
+    ``cfg.moe.backend`` through the backend registry (DESIGN.md §6);
+    the default "auto" keeps the historical behavior — sharded when a real
+    mesh is active, oracle otherwise."""
+    from repro.core import backend as B
+    fn = B.get_backend(B.resolve_backend(cfg.moe, ctx))
+    return fn(params, x, cfg, ctx, rng=rng, decision=decision,
+              is_training=is_training, token_ids=token_ids)

@@ -9,11 +9,14 @@ decode HBM-efficient). Block sizes are multiples of 128 on the minor dim.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.platform import fit_block, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -50,15 +53,11 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "interpret"))
-def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, index: jax.Array,
-                 *, bs: int = 512, interpret: bool = True) -> jax.Array:
-    """q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar int32 (positions
-    > index are masked). Returns (B, H, hd)."""
+def _flash_decode_jit(q, k, v, index, bs, interpret):
     b, h, hd = q.shape
     s, kv = k.shape[1], k.shape[2]
     rep = h // kv
-    bs = min(bs, s)
-    assert s % bs == 0, (s, bs)
+    bs = fit_block(s, bs)
     qg = q.reshape(b, kv, rep, hd)
     grid = (b, kv, s // bs)
     out = pl.pallas_call(
@@ -83,3 +82,13 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, index: jax.Array,
         interpret=interpret,
     )(jnp.asarray(index, jnp.int32).reshape(1), qg, k, v)
     return out.reshape(b, h, hd)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, index: jax.Array,
+                 *, bs: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar int32 (positions
+    > index are masked). Returns (B, H, hd). interpret=None -> platform
+    (resolved before the jit boundary so the cached executable is keyed on
+    the concrete mode)."""
+    return _flash_decode_jit(q, k, v, index, bs, resolve_interpret(interpret))

@@ -11,11 +11,14 @@ Grid: (E, C/bc, F/bf, D/bd) — innermost axis accumulates over d.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.platform import fit_block, resolve_interpret
 
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref):
@@ -31,17 +34,12 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref):
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
-def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
-                   bf: int = 128, bd: int = 128,
-                   interpret: bool = True) -> jax.Array:
-    """x: (E, C, d) @ w: (E, d, f) -> (E, C, f), per-expert."""
+def _gmm_impl(x, w, bc, bf, bd, interpret):
     e, c, d = x.shape
     _, _, f = w.shape
-    bc = min(bc, c)
-    bf = min(bf, f)
-    bd = min(bd, d)
-    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (x.shape, w.shape)
+    bc = fit_block(c, bc)
+    bf = fit_block(f, bf)
+    bd = fit_block(d, bd)
     grid = (e, c // bc, f // bf, d // bd)
     return pl.pallas_call(
         _kernel,
@@ -55,3 +53,41 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _gmm(x, w, bc, bf, bd, interpret):
+    return _gmm_impl(x, w, bc, bf, bd, interpret)
+
+
+def _gmm_fwd(x, w, bc, bf, bd, interpret):
+    return _gmm_impl(x, w, bc, bf, bd, interpret), (x, w)
+
+
+def _gmm_bwd(bc, bf, bd, interpret, res, dy):
+    # both cotangents are themselves grouped matmuls — reuse the kernel
+    x, w = res
+    dx = _gmm_impl(dy, jnp.swapaxes(w, 1, 2), bc, bd, bf, interpret)
+    dw = _gmm_impl(jnp.swapaxes(x, 1, 2), dy, bd, bf, bc, interpret)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_gmm.defvjp(_gmm_fwd, _gmm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def _gmm_jit(x, w, bc, bf, bd, interpret):
+    return _gmm(x, w, bc, bf, bd, interpret)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
+                   bf: int = 128, bd: int = 128,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """x: (E, C, d) @ w: (E, d, f) -> (E, C, f), per-expert.
+
+    interpret=None auto-detects the platform (resolved before the jit
+    boundary so the cache is keyed on the concrete mode); block sizes
+    shrink to exact divisors on non-MXU-aligned (test) shapes.
+    Differentiable via a custom VJP whose backward runs the same kernel on
+    transposed operands."""
+    return _gmm_jit(x, w, bc, bf, bd, resolve_interpret(interpret))

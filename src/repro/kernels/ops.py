@@ -1,13 +1,14 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True (CPU container); on real TPU pass
-interpret=False (the kernels are written with MXU-aligned BlockSpecs).
-Routing-table construction (slot maps) lives here: it turns the
-router's DispatchInfo into the gather form the kernels consume.
+``interpret=None`` (the default) auto-detects the platform (DESIGN.md §6):
+kernels compile on TPU and run under the Pallas interpreter elsewhere.
+Routing-table construction (slot maps) lives here: ``routing_tables`` turns
+the router's DispatchInfo into the gather form the kernels consume, ONCE
+per step — both the dispatch and the combine gather reuse the same tables.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +19,13 @@ from repro.core.router import DispatchInfo
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.grouped_ffn import grouped_matmul
 from repro.kernels.moe_dispatch import combine, dispatch
+from repro.kernels.platform import (default_interpret, force_interpret,
+                                    resolve_interpret)
 
 # Global switch: when True the MoE layer routes its dispatch/FFN/combine
-# through the Pallas kernels (interpret=True on CPU). Flip with use_kernels().
+# through the Pallas kernels (interpret mode off-TPU). Flip with
+# use_kernels(); the `pallas` execution backend (core/backend.py) uses the
+# kernels unconditionally.
 KERNELS_ENABLED = False
 
 
@@ -35,13 +40,22 @@ def use_kernels(enabled: bool = True):
         KERNELS_ENABLED = prev
 
 
-def build_slot_maps(info: DispatchInfo, n_experts: int,
-                    cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """DispatchInfo -> (slot_token (E*C,), slot_valid (E*C,), token_slot (T,K)).
+class RoutingTables(NamedTuple):
+    """Gather-form routing state, built once per step from DispatchInfo.
 
-    slot_token[e*C + c] = which token fills slot c of expert e;
+    slot_token[e*C + c] = which token fills slot c of expert e (-1 empty);
+    slot_valid[s]       = slot s is occupied;
     token_slot[t, k]    = flat slot index for the (t, k) routing choice.
     """
+    slot_token: jax.Array    # (E*C,) int32
+    slot_valid: jax.Array    # (E*C,) bool
+    token_slot: jax.Array    # (T, K) int32
+
+
+def routing_tables(info: DispatchInfo, n_experts: int,
+                   cap: int) -> RoutingTables:
+    """DispatchInfo -> RoutingTables. The fused builder: one scatter over
+    (T*k,) produces both gather maps, so dispatch and combine share it."""
     t, k = info.topk_idx.shape
     flat_e = info.topk_idx.reshape(-1)
     flat_p = info.pos.reshape(-1)
@@ -52,28 +66,43 @@ def build_slot_maps(info: DispatchInfo, n_experts: int,
                           ).at[flat_slot].set(token_ids, mode="drop")[:-1]
     slot_valid = slot_token >= 0
     token_slot = jnp.where(keep, flat_e * cap + flat_p, 0).reshape(t, k)
-    return slot_token, slot_valid, token_slot
+    return RoutingTables(slot_token, slot_valid, token_slot)
+
+
+def build_slot_maps(info: DispatchInfo, n_experts: int,
+                    cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Back-compat alias of routing_tables (returns the same named tuple)."""
+    return routing_tables(info, n_experts, cap)
 
 
 def moe_dispatch_op(x: jax.Array, info: DispatchInfo, n_experts: int,
-                    cap: int, *, interpret: bool = True) -> jax.Array:
-    """Kernel-backed equivalent of router.dispatch: (T,d) -> (E, C, d)."""
-    slot_token, slot_valid, _ = build_slot_maps(info, n_experts, cap)
-    buf = dispatch(x, slot_token, slot_valid, interpret=interpret)
+                    cap: int, *, interpret: Optional[bool] = None,
+                    tables: Optional[RoutingTables] = None) -> jax.Array:
+    """Kernel-backed equivalent of router.dispatch: (T,d) -> (E, C, d).
+
+    Pass ``tables`` (from routing_tables) to reuse slot maps already built
+    for this step instead of recomputing them."""
+    if tables is None:
+        tables = routing_tables(info, n_experts, cap)
+    buf = dispatch(x, tables.slot_token, tables.slot_valid,
+                   interpret=interpret)
     return buf.reshape(n_experts, cap, x.shape[-1])
 
 
 def moe_combine_op(buf: jax.Array, info: DispatchInfo, *,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: Optional[bool] = None,
+                   tables: Optional[RoutingTables] = None) -> jax.Array:
     """Kernel-backed equivalent of router.combine: (E, C, d) -> (T, d)."""
     e, cap, d = buf.shape
-    _, _, token_slot = build_slot_maps(info, e, cap)
-    return combine(buf.reshape(e * cap, d), token_slot, info.topk_w,
+    if tables is None:
+        tables = routing_tables(info, e, cap)
+    return combine(buf.reshape(e * cap, d), tables.token_slot, info.topk_w,
                    info.keep, interpret=interpret)
 
 
 def expert_ffn_op(buf: jax.Array, w_in: jax.Array, w_gate, w_out: jax.Array,
-                  act: str = "silu", *, interpret: bool = True) -> jax.Array:
+                  act: str = "silu", *,
+                  interpret: Optional[bool] = None) -> jax.Array:
     """Full gated expert FFN from grouped_matmul kernels."""
     h = grouped_matmul(buf, w_in, interpret=interpret)
     actf = jax.nn.silu if act == "silu" else jax.nn.gelu
@@ -85,6 +114,7 @@ def expert_ffn_op(buf: jax.Array, w_in: jax.Array, w_gate, w_out: jax.Array,
     return grouped_matmul(h, w_out, interpret=interpret)
 
 
-__all__ = ["build_slot_maps", "combine", "dispatch", "expert_ffn_op",
-           "flash_decode", "grouped_matmul", "moe_combine_op",
-           "moe_dispatch_op"]
+__all__ = ["RoutingTables", "build_slot_maps", "combine", "default_interpret",
+           "dispatch", "expert_ffn_op", "flash_decode", "force_interpret",
+           "grouped_matmul", "moe_combine_op", "moe_dispatch_op",
+           "resolve_interpret", "routing_tables"]

@@ -251,7 +251,7 @@ def main():
 
     assert args.arch and args.shape, "--arch and --shape (or --all)"
     assert shape_applicable(args.arch, args.shape), \
-        f"{args.arch} x {args.shape} marked inapplicable (see DESIGN.md)"
+        f"{args.arch} x {args.shape} marked inapplicable (see DESIGN.md §3)"
     res = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
                   static_decision=dec, tag=args.tag, overrides=overrides)
     print(json.dumps({k: v for k, v in res.items()

@@ -6,8 +6,10 @@ import jax
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)   # older jax: axes are Auto by default
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +23,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks (e.g. (4, 2) on 8 CPU devices)."""
     return _mk(tuple(shape), tuple(axes))
+
+
+def abstract_mesh(shape, axes):
+    """AbstractMesh across jax versions: no devices needed, spec-validity
+    checks only (used by tests against the production mesh shapes)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))        # >= 0.5 API
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))          # 0.4.x API

@@ -2,10 +2,14 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --batch 8 --prompt-len 64 --max-new 32
+
+MoE archs honour ``--backend`` (DESIGN.md §6): oracle / sharded / pallas
+execution of the expert layers during prefill+decode.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -25,11 +29,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "auto", "oracle", "sharded", "pallas"],
+                    help="MoE execution backend (DESIGN.md §6)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.backend and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, backend=args.backend))
     key = jax.random.PRNGKey(args.seed)
     params = init_model(key, cfg)
     max_seq = args.prompt_len + args.max_new

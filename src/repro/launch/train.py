@@ -83,6 +83,9 @@ def main():
     ap.add_argument("--gd-rate", type=float, default=None)
     ap.add_argument("--router", default=None,
                     choices=[None, "softmax", "sigmoid", "hash"])
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "auto", "oracle", "sharded", "pallas"],
+                    help="MoE execution backend (DESIGN.md §6)")
     ap.add_argument("--mesh", default=None, help="e.g. 4,2 => (data,model)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-every", type=int, default=0)
@@ -94,7 +97,7 @@ def main():
     if args.reduced:
         cfg = reduced(cfg)
     if cfg.moe is not None and (args.gd_mode or args.gd_rate is not None
-                                or args.router):
+                                or args.router or args.backend):
         gd = cfg.moe.gating_dropout
         gd = dataclasses.replace(
             gd,
@@ -102,7 +105,8 @@ def main():
             rate=args.gd_rate if args.gd_rate is not None else gd.rate)
         moe = dataclasses.replace(
             cfg.moe, gating_dropout=gd,
-            router_type=args.router or cfg.moe.router_type)
+            router_type=args.router or cfg.moe.router_type,
+            backend=args.backend or cfg.moe.backend)
         cfg = dataclasses.replace(cfg, moe=moe)
 
     ctx = None

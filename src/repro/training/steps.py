@@ -7,6 +7,12 @@ Gating Dropout execution strategies (DESIGN.md §5):
   host_cond   -- TWO jitted steps (routed / dropped); the host draws the
                  same consensus bit and dispatches. The dropped executable
                  contains no all-to-all at all (paper-faithful).
+
+Both strategies execute the MoE layers through the backend selected by
+``cfg.moe.backend`` (oracle / sharded / pallas — the registry in
+core/backend.py, DESIGN.md §6): the config is threaded into every jitted
+step below via model_apply -> moe_apply, so swapping backends never
+requires touching the step builders.
 """
 from __future__ import annotations
 

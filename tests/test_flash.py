@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import full_attention
 from repro.models.flash import flash_attention
@@ -55,10 +54,17 @@ def test_q_offset_cross_chunk():
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
 
 
-@settings(max_examples=12, deadline=None)
-@given(lq=st.integers(3, 50), lk=st.integers(8, 60),
-       qc=st.sampled_from([8, 16, 32]), kc=st.sampled_from([8, 16, 32]),
-       causal=st.booleans())
+@pytest.mark.parametrize("lq,lk,qc,kc,causal", [
+    # fixed sweep over ragged chunk combinations (was hypothesis-driven)
+    (3, 8, 8, 8, False),
+    (17, 60, 16, 32, True),
+    (50, 50, 32, 8, True),
+    (33, 40, 8, 16, False),
+    (5, 64, 32, 32, True),
+    (48, 48, 16, 16, False),
+    (41, 59, 32, 16, True),
+    (26, 31, 8, 32, False),
+])
 def test_chunking_invariance(lq, lk, qc, kc, causal):
     """Result must be independent of chunk sizes (incl. ragged pads)."""
     if causal:

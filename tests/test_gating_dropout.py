@@ -108,8 +108,8 @@ def test_dropped_executable_has_no_alltoall():
 import jax, jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig, GatingDropoutConfig
 from repro.core import init_moe_params, moe_sharded, ParallelContext
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ('data', 'model'))
 ctx = ParallelContext(mesh=mesh)
 cfg = ModelConfig(d_model=64, d_ff=128, vocab=100, moe=MoEConfig(
     n_experts=8, top_k=1, d_ff_expert=128,
@@ -133,8 +133,8 @@ def test_sharded_matches_oracle_all_branches():
 import jax, jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig, GatingDropoutConfig
 from repro.core import init_moe_params, moe_oracle, moe_sharded, ParallelContext
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ('data', 'model'))
 ctx = ParallelContext(mesh=mesh)
 cfg = ModelConfig(d_model=64, d_ff=128, vocab=100, moe=MoEConfig(
     n_experts=8, top_k=2, d_ff_expert=128, capacity_factor=1.5,

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.core import router as R
@@ -83,8 +82,8 @@ def test_flash_decode_sweep(h, kv, hd, s, bs, dtype):
                                np.asarray(o_ref, np.float32), atol=atol)
 
 
-@settings(max_examples=8, deadline=None)
-@given(idx=st.integers(0, 255), bs=st.sampled_from([64, 128]))
+@pytest.mark.parametrize("idx", [0, 7, 63, 64, 128, 200, 255])
+@pytest.mark.parametrize("bs", [64, 128])
 def test_flash_decode_index_property(idx, bs):
     """Changing keys BEYOND idx never changes the output."""
     b, h, kv, hd, s = 1, 2, 1, 32, 256

@@ -4,12 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from conftest import run_py
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.configs.base import TrainConfig
 from repro.core.moe import ParallelContext
+from repro.launch.mesh import abstract_mesh
 from repro.models.model import init_cache, init_model
 from repro.parallel.sharding import cache_specs, param_specs, state_specs
 from repro.training.steps import init_train_state
@@ -17,8 +18,8 @@ from repro.training.steps import init_train_state
 
 def _abstract_mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
@@ -117,8 +118,8 @@ state_cpu = init_train_state(params, tc)
 step_cpu = make_train_step(cfg, tc, None)
 _, m_cpu = step_cpu(state_cpu, batch, False)
 
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ('data', 'model'))
 ctx = ParallelContext(mesh=mesh)
 state = init_train_state(init_model(key, cfg), tc)
 st_specs = to_shardings(mesh, state_specs(cfg, ctx, jax.eval_shape(lambda: state)))
