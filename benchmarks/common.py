@@ -65,3 +65,13 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row)
     return row
+
+
+def decode_bleu(params, cfg, task, **kw) -> float:
+    """Corpus BLEU of greedy decodes on a validation batch (MT task).
+
+    The paper's actual Table-2/4 metric. Thin alias for the ONE
+    corpus-BLEU-via-engine helper (launch/train.py::greedy_bleu) so
+    train-time eval and the benchmarks can never drift apart."""
+    from repro.launch.train import greedy_bleu
+    return greedy_bleu(params, cfg, task, **kw)

@@ -45,6 +45,11 @@ def bench_table5(fast):
     return main(fast)
 
 
+def bench_table6(fast):
+    from benchmarks.table6_decode import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -84,6 +89,7 @@ BENCHES = {
     "table4": bench_table4,
     "fig6": bench_fig6,
     "table5": bench_table5,
+    "table6": bench_table6,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

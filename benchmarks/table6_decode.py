@@ -1,0 +1,126 @@
+"""Table 6 (beyond paper): compiled decode loop vs legacy per-token loop.
+
+Measures end-to-end generation (prefill + max_new greedy tokens) two ways
+on 2-3 reduced archs covering the cache families:
+
+  * compiled -- the engine (repro.serve, DESIGN.md §7): prefill + the
+    whole ``lax.while_loop`` in ONE jitted executable.
+  * legacy   -- the pre-engine shape: jitted prefill, then a host-side
+    Python loop dispatching one jitted ``decode_step`` per token (what
+    launch/serve.py, examples/serve_decode.py and train.py::greedy_bleu
+    each hand-rolled before PR 2).
+
+Both paths emit identical greedy tokens (asserted); the benchmark records
+throughput for each and the speedup into
+``benchmarks/artifacts/table6_decode.json`` (schema: benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ART, csv_row
+from repro.configs import get_config, reduced
+from repro.models import decode_step, init_model, prefill
+from repro.serve import GenerateConfig, make_generate_fn
+
+ARCHS = ["yi-6b", "zcode-m3-base", "mamba2-1.3b"]
+
+
+def _batch(cfg, key, b, prompt_len):
+    batch = {"tokens": jax.random.randint(key, (b, prompt_len), 3, cfg.vocab)}
+    if cfg.encdec is not None:
+        if cfg.encdec.frontend == "stub":
+            batch["frames"] = jax.random.normal(
+                key, (b, cfg.encdec.encoder_seq, cfg.d_model))
+        else:
+            batch["enc_tokens"] = jax.random.randint(key, (b, 32), 3,
+                                                     cfg.vocab)
+    return batch
+
+
+def make_legacy_fns(cfg, prompt_len: int, max_new: int):
+    """Jitted prefill + per-token decode_step, built ONCE so the timed
+    loop measures dispatch (not retracing)."""
+    pre = jax.jit(lambda p, b: prefill(p, b, cfg,
+                                       max_seq=prompt_len + max_new))
+    step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
+    return pre, step
+
+
+def legacy_generate(params, batch, pre, step, max_new: int):
+    """The old per-token-Python-dispatch loop (correctly indexed)."""
+    prompt_len = batch["tokens"].shape[1]
+    logits, caches = pre(params, batch)
+    cur = logits.argmax(-1).astype(jnp.int32)
+    outs = [np.asarray(cur)[:, 0]]
+    for i in range(max_new - 1):
+        logits, caches = step(params, caches, cur, prompt_len + i)
+        cur = logits.argmax(-1).astype(jnp.int32)
+        outs.append(np.asarray(cur)[:, 0])
+    return np.stack(outs, 1)
+
+
+def _time(fn, iters: int):
+    jax.block_until_ready(fn())            # warmup (compile) fully retired
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def bench_arch(arch: str, *, batch: int, prompt_len: int, max_new: int,
+               iters: int) -> Dict:
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    b = _batch(cfg, key, batch, prompt_len)
+
+    fn = make_generate_fn(cfg, GenerateConfig(max_new=max_new, eos_id=-1))
+    t_comp, res = _time(lambda: fn(params, b), iters)
+    pre, step = make_legacy_fns(cfg, prompt_len, max_new)
+    t_leg, leg = _time(lambda: legacy_generate(params, b, pre, step,
+                                               max_new), iters)
+    tokens_equal = bool(
+        (np.asarray(res.tokens) == np.asarray(leg)).all())
+    n_tok = batch * max_new
+    rec = {
+        "compiled": {"wall_s": t_comp, "tok_s": n_tok / t_comp},
+        "legacy": {"wall_s": t_leg, "tok_s": n_tok / t_leg},
+        "speedup": t_leg / t_comp,
+        "tokens_equal": tokens_equal,
+    }
+    csv_row(f"table6/{arch}", t_comp * 1e6,
+            f"compiled_tok_s={rec['compiled']['tok_s']:.0f};"
+            f"legacy_tok_s={rec['legacy']['tok_s']:.0f};"
+            f"speedup={rec['speedup']:.2f}x;tokens_equal={tokens_equal}")
+    assert tokens_equal, f"{arch}: compiled and legacy loops diverged"
+    return rec
+
+
+def main(fast: bool = True):
+    batch, prompt_len = (4, 16) if fast else (8, 64)
+    max_new = 16 if fast else 64
+    iters = 2 if fast else 5
+    out = {"shape": {"batch": batch, "prompt_len": prompt_len,
+                     "max_new": max_new, "iters": iters},
+           "archs": {}}
+    for arch in ARCHS:
+        out["archs"][arch] = bench_arch(arch, batch=batch,
+                                        prompt_len=prompt_len,
+                                        max_new=max_new, iters=iters)
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table6_decode.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(fast=False), indent=1))

@@ -12,7 +12,8 @@ from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
 from repro.core.gating_dropout import drop_decision_host
 from repro.data import MTTaskConfig, MultilingualMT
-from repro.models import decode_step, init_model, prefill
+from repro.models import init_model
+from repro.serve import GenerateConfig, generate
 from repro.training import init_train_state, make_train_step
 
 # 1. Config: the paper's Z-code-M3-base family at toy scale, with Gate-Drop
@@ -39,17 +40,12 @@ for i in range(100):
         print(f"step {i:3d} loss={float(m['loss']):.3f} "
               f"acc={float(m['acc']):.3f} dropped={dropped}")
 
-# 4. Greedy decode one source sentence
+# 4. Greedy decode one source sentence through the compiled engine
+#    (repro.serve, DESIGN.md §7: prefill + decode loop in one executable)
 val = task.sample_batch(9999, 1)
 batch = {"enc_tokens": jnp.asarray(val["enc_tokens"]),
          "tokens": jnp.asarray(val["tokens"][:, :1])}
-_, caches = prefill(state["params"], batch, cfg, max_seq=40)
-tok = batch["tokens"]
-out = []
-for i in range(20):
-    logits, caches = decode_step(state["params"], caches, tok, i, cfg)
-    tok = logits.argmax(-1).astype(jnp.int32)
-    out.append(int(tok[0, 0]))
+res = generate(state["params"], batch, cfg, GenerateConfig(max_new=20))
 print("source :", val["enc_tokens"][0][:12].tolist())
 print("ref    :", val["labels"][0][:12].tolist())
-print("decoded:", out[:12])
+print("decoded:", res.tokens[0][:12].tolist())

@@ -1,27 +1,26 @@
-"""Serving example: batched prefill + greedy decode for any assigned arch.
+"""Serving example: batched prefill + compiled decode for any assigned arch.
 
   PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
   PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v3-671b \
       --batch 4 --prompt-len 32   # reduced config, MLA absorbed decode
 
-Demonstrates the per-family cache machinery: full KV, sliding-window ring
-buffer, MLA compressed latents, SSM constant-size state.
+Demonstrates the per-family cache machinery (full KV, sliding-window ring
+buffer, MLA compressed latents, SSM constant-size state) driven by the
+one compiled generation loop in ``repro.serve`` (DESIGN.md §7).
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
-from repro.models import decode_step, init_cache, init_model, prefill
-from repro.training import make_serve_step
+from repro.models import init_cache, init_model
+from repro.serve import GenerateConfig, make_generate_fn
 
 
 def describe_cache(caches):
     total = 0
-    kinds = {}
     for leaf in jax.tree.leaves(caches):
         total += leaf.size * leaf.dtype.itemsize
     return total
@@ -51,24 +50,22 @@ def main():
             batch["enc_tokens"] = jax.random.randint(
                 key, (args.batch, 32), 3, cfg.vocab)
 
-    max_seq = args.prompt_len + args.max_new
-    t0 = time.time()
-    logits, caches = prefill(params, batch, cfg, max_seq=max_seq)
+    caches = init_cache(cfg, args.batch, args.prompt_len + args.max_new)
     print(f"{cfg.arch_id} [{cfg.family}]  cache bytes: "
-          f"{describe_cache(caches)/2**20:.1f} MiB "
-          f"(prefill {time.time()-t0:.2f}s)")
-    step = make_serve_step(cfg)
-    cur = logits.argmax(-1).astype(jnp.int32)
-    toks = []
+          f"{describe_cache(caches)/2**20:.1f} MiB")
+    del caches
+
+    fn = make_generate_fn(cfg, GenerateConfig(max_new=args.max_new,
+                                              eos_id=-1))
     t0 = time.time()
-    for i in range(args.max_new):
-        logits, caches = step(params, caches, cur, args.prompt_len + i)
-        cur = logits.argmax(-1).astype(jnp.int32)
-        toks.append(np.asarray(cur)[:, 0])
+    res = jax.block_until_ready(fn(params, batch))
+    print(f"compile+first run: {time.time()-t0:.2f} s")
+    t0 = time.time()
+    res = jax.block_until_ready(fn(params, batch))
     dt = time.time() - t0
     print(f"decode: {dt/args.max_new*1e3:.1f} ms/token, "
-          f"{args.batch*args.max_new/dt:.0f} tok/s")
-    print("first sequence:", np.stack(toks, 1)[0].tolist())
+          f"{args.batch*args.max_new/dt:.0f} tok/s (single compiled loop)")
+    print("first sequence:", np.asarray(res.tokens)[0].tolist())
 
 
 if __name__ == "__main__":

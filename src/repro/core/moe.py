@@ -183,9 +183,16 @@ def _local_adjust(rr, moe: MoEConfig, lo, e_loc: int):
 
 def _local_aux(rr, info, moe: MoEConfig, T: int) -> Dict[str, jax.Array]:
     """Aux dict for a Gate-Drop local step (balance only on routed steps);
-    ``rr`` must carry GLOBAL expert ids."""
-    load = jnp.zeros((moe.n_experts,), jnp.float32).at[rr.topk_idx[:, 0]].add(
-        1.0 / T, mode="drop")
+    ``rr`` must carry GLOBAL expert ids.
+
+    Load counts ALL k slots, each weighted by ``info.keep`` (valid local
+    pick that survived capacity) — matching the routed-step semantics of
+    ``router.expert_load`` where ``load.sum() == top_k``; here the sum is
+    <= top_k, short exactly by the dropped fraction. Counting only slot 0
+    (the old behavior) misreported expert load for top_k > 1."""
+    w = (info.keep.astype(jnp.float32) / T).reshape(-1)
+    load = jnp.zeros((moe.n_experts,), jnp.float32).at[
+        rr.topk_idx.reshape(-1)].add(w, mode="drop")
     return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
             "load": load, "dropped_frac": 1.0 - info.keep.mean()}
 

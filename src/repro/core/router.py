@@ -184,6 +184,10 @@ def router_z_loss(rr: RouteResult) -> jax.Array:
 
 
 def expert_load(rr: RouteResult, cfg: MoEConfig) -> jax.Array:
-    """(E,) fraction of top-1 assignments per expert (monitoring)."""
-    f = jnp.zeros((cfg.n_experts,), jnp.float32).at[rr.topk_idx[:, 0]].add(1.0)
+    """(E,) routed assignments per expert over ALL k slots, per token
+    (monitoring): ``load.sum() == top_k``. Gate-Drop local steps report the
+    same quantity restricted to slots that survived locally
+    (core/moe.py::_local_aux), so the two step kinds stay comparable."""
+    f = jnp.zeros((cfg.n_experts,), jnp.float32).at[
+        rr.topk_idx.reshape(-1)].add(1.0)
     return f / rr.topk_idx.shape[0]

@@ -1,8 +1,14 @@
-"""Batched greedy serving loop (prefill + decode) for any arch.
+"""Batched serving CLI for any arch, via the compiled decoding engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --batch 8 --prompt-len 64 --max-new 32
+  PYTHONPATH=src python -m repro.launch.serve --arch zcode-m3-base --reduced \
+      --beam 4                      # beam search
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+      --temperature 0.8 --top-k 40  # sampling
 
+Generation runs through ``repro.serve`` (DESIGN.md §7): prefill + the
+whole token loop in ONE jitted executable — no per-token Python dispatch.
 MoE archs honour ``--backend`` (DESIGN.md §6): oracle / sharded / pallas
 execution of the expert layers during prefill+decode.
 """
@@ -13,12 +19,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.models import decode_step, init_model, prefill
-from repro.training import make_serve_step
+from repro.models import init_model
+from repro.serve import GenerateConfig, make_generate_fn
 
 
 def main():
@@ -29,6 +34,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sampling pool size (0 = full vocab)")
+    ap.add_argument("--beam", type=int, default=1,
+                    help=">1 = beam search (overrides sampling)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="EOS token id for early exit (-1 = generate "
+                         "max-new tokens unconditionally)")
     ap.add_argument("--backend", default=None,
                     choices=[None, "auto", "oracle", "sharded", "pallas"],
                     help="MoE execution backend (DESIGN.md §6)")
@@ -42,7 +56,6 @@ def main():
             cfg.moe, backend=args.backend))
     key = jax.random.PRNGKey(args.seed)
     params = init_model(key, cfg)
-    max_seq = args.prompt_len + args.max_new
     batch = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 3, cfg.vocab)}
     if cfg.vlm is not None:
@@ -56,25 +69,23 @@ def main():
             batch["enc_tokens"] = jax.random.randint(
                 key, (args.batch, 32), 3, cfg.vocab)
 
+    gen = GenerateConfig(max_new=args.max_new, temperature=args.temperature,
+                         top_k=args.top_k, beam_width=args.beam,
+                         eos_id=args.eos)
+    fn = make_generate_fn(cfg, gen)
     t0 = time.time()
-    logits, caches = prefill(params, batch, cfg, max_seq=max_seq)
-    cur = logits.argmax(-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-    step = make_serve_step(cfg)
-    outs = []
+    res = jax.block_until_ready(fn(params, batch, key))   # compile + run
+    t_compile = time.time() - t0
     t0 = time.time()
-    for i in range(args.max_new):
-        logits, caches = step(params, caches, cur, args.prompt_len + i)
-        cur = logits.argmax(-1).astype(jnp.int32)
-        outs.append(np.asarray(cur)[:, 0])
+    res = jax.block_until_ready(fn(params, batch, key))
     dt = time.time() - t0
-    gen = np.stack(outs, 1)
+    n_tok = int(np.asarray(res.lengths).sum())
     print(f"arch={cfg.arch_id} batch={args.batch} prompt={args.prompt_len} "
-          f"new={args.max_new}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms; decode: "
-          f"{dt/args.max_new*1e3:.2f} ms/token "
-          f"({args.batch*args.max_new/dt:.0f} tok/s)")
-    print("sample:", gen[0][:16].tolist())
+          f"new={args.max_new} beam={args.beam}")
+    print(f"compile+first: {t_compile:.2f} s; steady: {dt*1e3:.1f} ms "
+          f"({dt/max(int(res.steps), 1)*1e3:.2f} ms/step, "
+          f"{n_tok/dt:.0f} tok/s)")
+    print("sample:", np.asarray(res.tokens)[0][:16].tolist())
 
 
 if __name__ == "__main__":

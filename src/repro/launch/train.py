@@ -24,11 +24,12 @@ from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
 from repro.core.gating_dropout import drop_decision_host
 from repro.core.moe import ParallelContext
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import MTTaskConfig, MultilingualMT, LMTaskConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.metrics import corpus_bleu, strip_special
-from repro.models import init_model, prefill, decode_step
+from repro.models import init_model
+from repro.serve import GenerateConfig, generate
 from repro.training import init_train_state, make_eval_step, make_train_step
 
 
@@ -47,22 +48,26 @@ def build_batch_fn(cfg, args):
     return task, fn
 
 
-def greedy_bleu(params, cfg, task, *, n=32, max_new=36, seed=10_000):
-    """Greedy decode a validation batch -> token BLEU (MT task only)."""
-    b = task.sample_batch(seed, n)
+def greedy_bleu(params, cfg, task, *, n=32, max_new=36, seed=10_000,
+                ctx=None, lang=None):
+    """Greedy decode a validation batch -> corpus BLEU (MT task only).
+
+    THE corpus-BLEU-via-engine helper — the BLEU benchmarks call it too
+    (benchmarks/common.py::decode_bleu). Decodes through the compiled
+    engine (repro.serve, DESIGN.md §7): the first generated token comes
+    from the prefill logits and the first decode_step runs at index
+    ``prompt_len`` — the previous hand-rolled loop here fed index 0 after
+    prefill, clobbering the BOS cache slot and corrupting every reported
+    BLEU. ``lang`` restricts the validation batch to one language
+    (Table-4 per-direction splits)."""
+    kw = {} if lang is None else {"lang": lang}
+    b = task.sample_batch(seed, n, **kw)
     batch = {"enc_tokens": jnp.asarray(b["enc_tokens"]),
              "tokens": jnp.asarray(b["tokens"][:, :1])}   # BOS
-    _, caches = prefill(params, batch, cfg, max_seq=max_new + 2)
-    tok = batch["tokens"]
-    outs = [  ]
-    cur = tok
-    for i in range(max_new):
-        logits, caches = decode_step(params, caches, cur, i, cfg)
-        cur = logits.argmax(-1).astype(jnp.int32)
-        outs.append(np.asarray(cur)[:, 0])
-    hyp = np.stack(outs, 1)
+    res = generate(params, batch, cfg, GenerateConfig(max_new=max_new),
+                   ctx=ctx)
+    hyps = [strip_special(h) for h in np.asarray(res.tokens)]
     refs = [strip_special(r) for r in b["labels"]]
-    hyps = [strip_special(h) for h in hyp]
     return corpus_bleu(hyps, refs)
 
 
@@ -88,6 +93,9 @@ def main():
                     help="MoE execution backend (DESIGN.md §6)")
     ap.add_argument("--mesh", default=None, help="e.g. 4,2 => (data,model)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir "
+                         "(params + opt + step) and continue training")
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--json-out", default=None)
@@ -119,13 +127,24 @@ def main():
     task, batch_fn = build_batch_fn(cfg, args)
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
     state = init_train_state(params, tc)
+    start_step = 0
+    if args.resume:
+        assert args.ckpt_dir, "--resume needs --ckpt-dir"
+        assert latest_step(args.ckpt_dir) is not None, \
+            f"--resume: no checkpoint in {args.ckpt_dir}"
+        state, meta = restore_checkpoint(args.ckpt_dir, state)
+        start_step = int(meta["step"])
+        print(f"resumed {args.ckpt_dir} @ step {start_step}")
     step_fn = make_train_step(cfg, tc, ctx)
     gd = cfg.moe.gating_dropout if cfg.moe is not None else None
 
     history = []
     t0 = time.time()
     tokens_done = 0
-    for i in range(args.steps):
+    # the loop index is the ABSOLUTE step: after --resume both the data
+    # stream (batch_fn) and the Gating-Dropout consensus PRNG (seed, step)
+    # continue exactly where the checkpointed run left off (DESIGN.md §2)
+    for i in range(start_step, args.steps):
         batch = batch_fn(i)
         dec = drop_decision_host(gd, args.seed, i) if gd and gd.enabled else False
         state, m = step_fn(state, batch, bool(dec))
@@ -138,7 +157,7 @@ def main():
                 rec["balance"] = float(m["balance"])
             if args.eval_every and args.task == "mt" and \
                     (i % args.eval_every == 0 or i == args.steps - 1):
-                rec["bleu"] = greedy_bleu(state["params"], cfg, task)
+                rec["bleu"] = greedy_bleu(state["params"], cfg, task, ctx=ctx)
             history.append(rec)
             print(json.dumps(rec))
     if args.ckpt_dir:

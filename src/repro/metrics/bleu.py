@@ -35,7 +35,9 @@ def corpus_bleu(hyps: List[Sequence[int]], refs: List[Sequence[int]],
             return 0.0
         # smoothed (add-eps) precision
         log_p += math.log((match + 1e-9) / (total + 1e-9))
-    bp = 1.0 if hyp_len > ref_len else math.exp(1 - ref_len / max(hyp_len, 1))
+    # sacreBLEU semantics: BP == 1 when hyp_len >= ref_len (the penalty
+    # applies only to hypotheses STRICTLY shorter than the reference)
+    bp = 1.0 if hyp_len >= ref_len else math.exp(1 - ref_len / hyp_len)
     return 100.0 * bp * math.exp(log_p / max_n)
 
 

@@ -1,0 +1,5 @@
+from repro.serve.engine import (GenerateConfig, GenerateResult, generate,
+                                make_generate_fn)
+
+__all__ = ["GenerateConfig", "GenerateResult", "generate",
+           "make_generate_fn"]

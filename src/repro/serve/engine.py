@@ -1,0 +1,278 @@
+"""Compiled decoding engine — the ONE generation loop in the repo.
+
+Every caller that turns a model + prompt into tokens goes through here:
+``launch/serve.py``, ``launch/train.py`` (BLEU eval), the examples, and
+the BLEU benchmarks. The contract (DESIGN.md §7):
+
+  * prefill writes cache positions ``[0, P)`` for a P-token prompt and
+    returns the logits of position ``P-1`` — i.e. the distribution of the
+    FIRST generated token. The first ``decode_step`` therefore runs at
+    absolute index ``P`` (feeding the token that lives at position P),
+    never at 0 — feeding index 0 after prefill overwrites the BOS slot
+    and shifts every RoPE phase/mask one position early.
+  * the per-token loop is a ``jax.lax.while_loop`` inside ONE jitted
+    function (no per-token Python dispatch), with per-sequence EOS
+    early-exit masking: once a sequence emits ``eos_id`` it produces only
+    ``pad_id`` and stops counting toward ``lengths``; the loop exits as
+    soon as every sequence is done.
+  * hybrid archs add their meta-token offset INSIDE ``decode_step``
+    (models/model.py), so callers always pass logical token positions.
+  * ``ParallelContext`` and the MoE backend registry (DESIGN.md §6) are
+    threaded through unchanged — decoding with ``--backend pallas``
+    uses the same engine.
+
+Greedy / temperature / top-k sampling share one loop; beam search
+(``GenerateConfig.beam_width > 1``) runs a second loop that tiles the
+batch to ``B*W`` rows and re-gathers every cache leaf along its batch
+axis at each step (DESIGN.md §7 beam bookkeeping).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.moe import ParallelContext
+from repro.models.model import decode_step, init_cache, prefill
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateConfig:
+    """Decoding options (hashable — baked into the jitted engine).
+
+    temperature <= 0 means greedy argmax; ``top_k`` restricts sampling to
+    the k highest logits (0 = full vocab; ``top_k=1`` == greedy).
+    ``beam_width > 1`` switches to deterministic beam search (sampling
+    options are ignored). ``eos_id < 0`` disables EOS early exit.
+    """
+    max_new: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    beam_width: int = 1
+    eos_id: int = 2
+    pad_id: int = 0
+    length_penalty: float = 1.0     # beam score norm: score / len**penalty
+    early_exit: bool = True         # stop the loop when every row is done
+
+    def __post_init__(self):
+        assert self.max_new >= 1
+        assert self.beam_width >= 1
+
+
+class GenerateResult(NamedTuple):
+    tokens: jax.Array    # (B, max_new) int32; pad_id after EOS
+    lengths: jax.Array   # (B,) int32 generated tokens incl. the EOS itself
+    scores: jax.Array    # (B,) f32 sum log p of emitted tokens (beam:
+                         #  length-penalized best-hypothesis score)
+    steps: jax.Array     # () int32 decode-loop iterations actually run
+
+
+# ---------------------------------------------------------------------------
+# cache batch-axis discovery (beam search re-gathers caches by parent beam)
+# ---------------------------------------------------------------------------
+
+def _cache_batch_axes(cfg: ModelConfig):
+    """Per-leaf batch-axis index for the decode cache (-1 = no batch dim).
+
+    Found structurally: build the cache at two batch sizes under
+    ``eval_shape`` and diff the leaf shapes — robust to every cache family
+    (full KV, ring buffer + its batchless ``pos`` leaf, MLA latents, SSM
+    state, cross KV)."""
+    a = jax.eval_shape(lambda: init_cache(cfg, 2, 16))
+    b = jax.eval_shape(lambda: init_cache(cfg, 5, 16))
+
+    def axis(sa, sb):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        assert len(diff) <= 1, (sa.shape, sb.shape)
+        return diff[0] if diff else -1
+
+    return jax.tree.map(axis, a, b)
+
+
+def _gather_cache(caches, axes, idx):
+    """Reorder every batched cache leaf by ``idx`` along its batch axis."""
+    return jax.tree.map(
+        lambda leaf, ax: leaf if ax < 0 else jnp.take(leaf, idx, axis=ax),
+        caches, axes)
+
+
+# ---------------------------------------------------------------------------
+# token selection
+# ---------------------------------------------------------------------------
+
+def _select(gen: GenerateConfig, logits: jax.Array, rng: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """(N, V) f32 logits -> (token (N,), log p of token (N,))."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if gen.temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        scaled = logits / gen.temperature
+        if gen.top_k > 0:
+            kth = jax.lax.top_k(scaled, gen.top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, NEG, scaled)
+        tok = jax.random.categorical(rng, scaled, axis=-1)
+    tok = tok.astype(jnp.int32)
+    return tok, jnp.take_along_axis(logp, tok[:, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# greedy / sampling loop
+# ---------------------------------------------------------------------------
+
+def _generate_sample(params, batch, rng, cfg: ModelConfig,
+                     gen: GenerateConfig, ctx) -> GenerateResult:
+    prompt_len = batch["tokens"].shape[1]
+    b = batch["tokens"].shape[0]
+    logits0, caches = prefill(params, batch, cfg, ctx,
+                              max_seq=prompt_len + gen.max_new)
+    tok0, lp0 = _select(gen, logits0[:, 0].astype(jnp.float32),
+                        jax.random.fold_in(rng, 0))
+    done0 = (tok0 == gen.eos_id) if gen.eos_id >= 0 else jnp.zeros(b, bool)
+    buf = jnp.full((b, gen.max_new), gen.pad_id, jnp.int32).at[:, 0].set(tok0)
+
+    def cond(state):
+        i, _, _, _, done, _, _ = state
+        keep = i < gen.max_new
+        if gen.early_exit:
+            keep = keep & ~jnp.all(done)
+        return keep
+
+    def body(state):
+        i, cur, caches, buf, done, length, score = state
+        # ``cur`` lives at absolute position prompt_len + i - 1
+        lg, caches = decode_step(params, caches, cur[:, None],
+                                 prompt_len + i - 1, cfg, ctx)
+        nxt, lp = _select(gen, lg[:, 0].astype(jnp.float32),
+                          jax.random.fold_in(rng, i))
+        nxt = jnp.where(done, gen.pad_id, nxt)
+        score = score + jnp.where(done, 0.0, lp)
+        length = length + jnp.where(done, 0, 1).astype(jnp.int32)
+        if gen.eos_id >= 0:
+            done = done | (nxt == gen.eos_id)
+        buf = jax.lax.dynamic_update_slice(buf, nxt[:, None], (0, i))
+        return i + 1, nxt, caches, buf, done, length, score
+
+    state = (jnp.asarray(1, jnp.int32), tok0, caches, buf, done0,
+             jnp.ones((b,), jnp.int32), lp0)
+    i, _, _, buf, _, length, score = jax.lax.while_loop(cond, body, state)
+    return GenerateResult(tokens=buf, lengths=length, scores=score,
+                          steps=i - 1)
+
+
+# ---------------------------------------------------------------------------
+# beam search loop
+# ---------------------------------------------------------------------------
+
+def _generate_beam(params, batch, rng, cfg: ModelConfig,
+                   gen: GenerateConfig, ctx) -> GenerateResult:
+    del rng  # beam search is deterministic
+    W = gen.beam_width
+    b = batch["tokens"].shape[0]
+    prompt_len = batch["tokens"].shape[1]
+    axes = _cache_batch_axes(cfg)
+    # Tile every prompt to W identical rows; prefill at B*W so every cache
+    # leaf already carries the beam-expanded batch axis.
+    tiled = {k: jnp.repeat(v, W, axis=0) for k, v in batch.items()}
+    logits0, caches = prefill(params, tiled, cfg, ctx,
+                              max_seq=prompt_len + gen.max_new)
+    logp0 = jax.nn.log_softmax(logits0[:, 0].astype(jnp.float32), -1)
+    # all W rows of a prompt are identical after prefill: seed the beams
+    # with the top-W distinct first tokens of row 0
+    scores, tok0 = jax.lax.top_k(logp0.reshape(b, W, -1)[:, 0], W)  # (B, W)
+    tok0 = tok0.astype(jnp.int32)
+    done = (tok0 == gen.eos_id) if gen.eos_id >= 0 \
+        else jnp.zeros((b, W), bool)
+    buf = jnp.full((b, W, gen.max_new), gen.pad_id,
+                   jnp.int32).at[:, :, 0].set(tok0)
+    V = logp0.shape[-1]
+    # frozen-beam continuation: a finished beam re-proposes only pad_id at
+    # log p = 0, so its score is carried unchanged through top-k
+    frozen = jnp.full((V,), NEG, jnp.float32).at[gen.pad_id].set(0.0)
+
+    def cond(state):
+        i, _, _, _, _, done, _ = state
+        keep = i < gen.max_new
+        if gen.early_exit:
+            keep = keep & ~jnp.all(done)
+        return keep
+
+    def body(state):
+        i, cur, caches, buf, scores, done, length = state
+        lg, caches = decode_step(params, caches, cur.reshape(b * W, 1),
+                                 prompt_len + i - 1, cfg, ctx)
+        logp = jax.nn.log_softmax(lg[:, 0].astype(jnp.float32), -1)
+        logp = logp.reshape(b, W, V)
+        logp = jnp.where(done[..., None], frozen[None, None], logp)
+        total = (scores[..., None] + logp).reshape(b, W * V)
+        scores, flat = jax.lax.top_k(total, W)                    # (B, W)
+        parent = (flat // V).astype(jnp.int32)
+        tok = (flat % V).astype(jnp.int32)
+        # re-gather all beam state by parent
+        buf = jnp.take_along_axis(buf, parent[..., None], axis=1)
+        done = jnp.take_along_axis(done, parent, axis=1)
+        length = jnp.take_along_axis(length, parent, axis=1)
+        flat_parent = (jnp.arange(b, dtype=jnp.int32)[:, None] * W
+                       + parent).reshape(-1)
+        caches = _gather_cache(caches, axes, flat_parent)
+        length = length + jnp.where(done, 0, 1).astype(jnp.int32)
+        if gen.eos_id >= 0:
+            done = done | (tok == gen.eos_id)
+        buf = jax.lax.dynamic_update_slice(buf, tok[..., None], (0, 0, i))
+        return i + 1, tok, caches, buf, scores, done, length
+
+    state = (jnp.asarray(1, jnp.int32), tok0, caches, buf, scores, done,
+             jnp.ones((b, W), jnp.int32))
+    i, _, _, buf, scores, _, length = jax.lax.while_loop(cond, body, state)
+    norm = scores / jnp.maximum(length, 1).astype(
+        jnp.float32) ** gen.length_penalty
+    best = jnp.argmax(norm, axis=1)
+    take = lambda x: jnp.take_along_axis(
+        x, best.reshape((b,) + (1,) * (x.ndim - 1)), axis=1).squeeze(1)
+    return GenerateResult(tokens=take(buf), lengths=take(length),
+                          scores=take(norm), steps=i - 1)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def make_generate_fn(cfg: ModelConfig, gen: GenerateConfig,
+                     ctx: Optional[ParallelContext] = None):
+    """Build the single-jit generation function.
+
+    Returns ``fn(params, batch, rng=None) -> GenerateResult`` where
+    ``batch`` holds the prompt ``tokens (B, P)`` plus the family's
+    conditioning inputs (``enc_tokens`` / ``frames`` / ``img_embeds``).
+    Prefill, the whole decode loop, and EOS bookkeeping compile into ONE
+    executable per (batch shape, config)."""
+    inner = _generate_beam if gen.beam_width > 1 else _generate_sample
+
+    @jax.jit
+    def fn(params, batch, rng=None):
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        return inner(params, batch, rng, cfg, gen, ctx)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=32)
+def _cached_fn(cfg: ModelConfig, gen: GenerateConfig,
+               ctx: Optional[ParallelContext]):
+    return make_generate_fn(cfg, gen, ctx)
+
+
+def generate(params, batch: Dict[str, Any], cfg: ModelConfig,
+             gen: GenerateConfig = GenerateConfig(),
+             ctx: Optional[ParallelContext] = None,
+             rng: Optional[jax.Array] = None) -> GenerateResult:
+    """Convenience wrapper: jitted engines are cached on (cfg, gen, ctx)."""
+    return _cached_fn(cfg, gen, ctx)(params, batch, rng)

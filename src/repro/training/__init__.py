@@ -1,6 +1,6 @@
 from repro.training.steps import (init_train_state, make_eval_step,
-                                  make_host_cond_steps, make_serve_step,
-                                  make_train_step, total_loss, xent_loss)
+                                  make_host_cond_steps, make_train_step,
+                                  total_loss, xent_loss)
 
 __all__ = ["init_train_state", "make_eval_step", "make_host_cond_steps",
-           "make_serve_step", "make_train_step", "total_loss", "xent_loss"]
+           "make_train_step", "total_loss", "xent_loss"]

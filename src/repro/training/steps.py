@@ -25,7 +25,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.gating_dropout import drop_decision, drop_decision_host
 from repro.core.moe import ParallelContext
-from repro.models.model import decode_step as _decode_step
 from repro.models.model import model_apply
 from repro.optim.adam import adam_init, adam_update
 
@@ -224,10 +223,6 @@ def make_eval_step(cfg: ModelConfig, ctx=None, *, jit: bool = True):
     return jax.jit(eval_fn) if jit else eval_fn
 
 
-def make_serve_step(cfg: ModelConfig, ctx=None, *, jit: bool = True):
-    """serve_step(params, caches, token (B,1), index) -> (logits, caches)."""
-    def serve_fn(params, caches, token, index):
-        return _decode_step(params, caches, token, index, cfg, ctx)
-    if jit:
-        return jax.jit(serve_fn, donate_argnums=(1,))
-    return serve_fn
+# NOTE: the old make_serve_step (a per-token jitted decode_step wrapper)
+# is gone — all generation runs through the compiled engine in
+# repro.serve (DESIGN.md §7), which loops decode_step inside one jit.

@@ -18,8 +18,16 @@ def _design_sections():
 
 def test_design_md_exists_with_required_sections():
     secs = _design_sections()
-    # §2 consensus PRNG, §4 mesh layout, §5 strategies, §6 backend registry
-    assert {"2", "4", "5", "6"} <= secs, secs
+    # §2 consensus PRNG, §4 mesh layout, §5 strategies, §6 backend
+    # registry, §7 decoding engine
+    assert {"2", "4", "5", "6", "7"} <= secs, secs
+
+
+def test_serve_engine_cites_design():
+    """The decoding engine must carry its DESIGN.md §7 contract references
+    (cache indexing, early exit, beam bookkeeping)."""
+    text = _read("src", "repro", "serve", "engine.py")
+    assert "DESIGN.md §7" in text
 
 
 def test_every_design_reference_in_src_resolves():

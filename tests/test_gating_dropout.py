@@ -1,5 +1,7 @@
 """Gating Dropout semantics: consensus, rates, branch equivalence, and the
 paper's core claim — the dropped executable contains NO all-to-all."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -80,6 +82,37 @@ def test_gate_expert_drop_skips_layer():
     y, aux = moe_oracle(p, x, cfg, ep=4, decision=True)
     assert np.abs(np.asarray(y)).max() == 0.0      # residual passthrough
     assert float(aux["balance"]) == 0.0
+
+
+def test_expert_load_counts_all_k_slots():
+    """Routed steps: load sums to exactly top_k (all k slots counted).
+    Gate-Drop local steps report the same semantics restricted to slots
+    that survived locally — sum <= top_k, equal when nothing drops, and
+    ALWAYS > 1 for top_k=2 with ample capacity (the old slot-0-only
+    counting capped the local sum at 1 and ignored capacity drops)."""
+    cfg = _cfg(k=2, E=8)
+    cfg = ModelConfig(d_model=32, d_ff=64, vocab=64, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=8.0, eval_capacity_factor=8.0))
+    p = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    _, aux_routed = moe_oracle(p, x, cfg, ep=4, decision=False)
+    assert float(aux_routed["load"].sum()) == pytest.approx(2.0, abs=1e-5)
+    _, aux_local = moe_oracle(p, x, cfg, ep=4, decision=True)
+    s = float(aux_local["load"].sum())
+    # ample capacity + 2 local experts per shard: both slots are locally
+    # satisfiable, so parity with the routed-step sum holds
+    assert s == pytest.approx(2.0, abs=1e-5)
+    assert float(aux_local["dropped_frac"]) == pytest.approx(0.0, abs=1e-5)
+    # with train capacity 1.0, drops appear and the sum is short exactly
+    # by the dropped fraction of the k slots
+    cfg_tight = ModelConfig(d_model=32, d_ff=64, vocab=64,
+                            moe=dataclasses.replace(cfg.moe,
+                                                    capacity_factor=1.0))
+    _, aux_tight = moe_oracle(p, x, cfg_tight, ep=4, decision=True,
+                              is_training=True)
+    st = float(aux_tight["load"].sum())
+    df = float(aux_tight["dropped_frac"])
+    assert st == pytest.approx(2.0 * (1.0 - df), abs=1e-5)
 
 
 def test_local_path_uses_only_local_experts():

@@ -1,0 +1,78 @@
+"""corpus_bleu pinned against hand-computed values, incl. the sacreBLEU
+brevity-penalty boundary (BP == 1 when hyp_len == ref_len)."""
+import math
+
+import pytest
+
+from repro.metrics import corpus_bleu, strip_special, token_accuracy
+
+EPS = 1e-9
+
+
+def _smoothed(match_totals):
+    lp = sum(math.log((m + EPS) / (t + EPS)) for m, t in match_totals)
+    return math.exp(lp / len(match_totals))
+
+
+def test_perfect_match_is_100():
+    assert corpus_bleu([[5, 6, 7, 8, 9]], [[5, 6, 7, 8, 9]]) == \
+        pytest.approx(100.0, abs=1e-3)
+
+
+def test_hand_computed_example():
+    """hyp [5,6,7,9] vs ref [5,6,7,8]: 1-gram 3/4, 2-gram 2/3, 3-gram 1/2,
+    4-gram 0/1 (eps-smoothed); hyp_len == ref_len so BP == 1 exactly."""
+    expected = 100.0 * _smoothed([(3, 4), (2, 3), (1, 2), (0, 1)])
+    assert corpus_bleu([[5, 6, 7, 9]], [[5, 6, 7, 8]]) == \
+        pytest.approx(expected, rel=1e-6)
+
+
+def test_brevity_penalty_strictly_short():
+    """Perfect 4-token prefix of a 6-token ref: every n-gram precision is
+    1, so the score is exactly the brevity penalty exp(1 - 6/4)."""
+    short = corpus_bleu([[5, 6, 7, 8]], [[5, 6, 7, 8, 9, 10]])
+    assert short == pytest.approx(100.0 * math.exp(1 - 6 / 4), rel=1e-4)
+
+
+def test_brevity_penalty_equal_length_boundary():
+    """hyp_len == ref_len must NOT be penalized (sacreBLEU: BP applies
+    only when hyp_len < ref_len; the old code used a strict > and
+    penalized exact-length hypotheses).
+
+    hyp [5,6,7,8,9,9] vs ref [5,6,7,8,9,10]: by hand 1g 5/6, 2g 4/5,
+    3g 3/4, 4g 2/3 and BP must be exactly 1."""
+    expected = 100.0 * _smoothed([(5, 6), (4, 5), (3, 4), (2, 3)])
+    got = corpus_bleu([[5, 6, 7, 8, 9, 9]], [[5, 6, 7, 8, 9, 10]])
+    assert got == pytest.approx(expected, rel=1e-6)
+
+
+def test_longer_hypothesis_not_brevity_penalized():
+    """hyp_len > ref_len: precision drops but no BP applies. 6 tokens vs
+    4-token ref, perfect prefix: 1g 4/6, 2g 3/5, 3g 2/4, 4g 1/3, BP 1."""
+    expected = 100.0 * _smoothed([(4, 6), (3, 5), (2, 4), (1, 3)])
+    got = corpus_bleu([[5, 6, 7, 8, 9, 10]], [[5, 6, 7, 8]])
+    assert got == pytest.approx(expected, rel=1e-6)
+
+
+def test_empty_hypothesis_is_zero():
+    assert corpus_bleu([[]], [[5, 6, 7]]) == 0.0
+
+
+def test_corpus_level_aggregation():
+    """Corpus BLEU pools n-gram counts and lengths over the whole corpus
+    (it is NOT a mean of sentence scores): two half-matching sentences
+    == pooled counts."""
+    hyps = [[5, 6, 7, 8], [9, 10, 11, 12]]
+    refs = [[5, 6, 7, 8], [9, 10, 13, 14]]
+    # pooled: 1g (4+2)/8, 2g (3+1)/6, 3g (2+0)/4, 4g (1+0)/2; lens 8 == 8
+    expected = 100.0 * _smoothed([(6, 8), (4, 6), (2, 4), (1, 2)])
+    assert corpus_bleu(hyps, refs) == pytest.approx(expected, rel=1e-6)
+
+
+def test_strip_special_and_accuracy():
+    assert strip_special([7, 8, 0, 9, 2, 11]) == [7, 8, 9]
+    import numpy as np
+    pred = np.array([[1, 2, 3]])
+    lab = np.array([[1, 2, 9]])
+    mask = np.ones((1, 3), np.float32)
+    assert token_accuracy(pred, lab, mask) == pytest.approx(2 / 3)

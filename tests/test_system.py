@@ -79,7 +79,19 @@ sys.argv = ['serve', '--arch', 'yi-6b', '--reduced', '--batch', '2',
 from repro.launch.serve import main
 main()
 """, n_devices=1)
-    assert "ms/token" in out
+    assert "tok/s" in out          # engine-backed CLI reports throughput
+    assert "ms/step" in out
+
+
+def test_serve_cli_beam_runs():
+    out = run_py("""
+import sys
+sys.argv = ['serve', '--arch', 'zcode-m3-base', '--reduced', '--batch', '2',
+            '--prompt-len', '8', '--max-new', '4', '--beam', '2']
+from repro.launch.serve import main
+main()
+""", n_devices=1)
+    assert "beam=2" in out and "tok/s" in out
 
 
 def test_dryrun_artifacts_have_roofline_inputs():
