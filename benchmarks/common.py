@@ -75,3 +75,21 @@ def decode_bleu(params, cfg, task, **kw) -> float:
     train-time eval and the benchmarks can never drift apart."""
     from repro.launch.train import greedy_bleu
     return greedy_bleu(params, cfg, task, **kw)
+
+
+def run_trainer(cfg, tc, *, batch, task=None, chunk=8,
+                strategy="traced_cond", seq=32, n_langs=8, prefetch=True):
+    """Train via the scan-fused Trainer (DESIGN.md §8) on the synthetic MT
+    task — THE train-loop helper for quality/throughput benchmarks, so
+    they measure the production loop rather than a hand-rolled one.
+
+    Returns (state, task, history)."""
+    from repro.data import MTTaskConfig, MultilingualMT
+    from repro.training import Trainer
+    if task is None:
+        task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=n_langs,
+                                           max_len=seq))
+    trainer = Trainer(cfg, tc, task.train_batches(batch), chunk=chunk,
+                      strategy=strategy, prefetch=prefetch, log=None)
+    state, history = trainer.run()
+    return state, task, history

@@ -12,36 +12,29 @@ from __future__ import annotations
 import dataclasses
 import json
 
-import jax
 import jax.numpy as jnp
 
-from benchmarks.common import V100_IB, csv_row
+from benchmarks.common import V100_IB, csv_row, run_trainer
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import drop_decision_host
-from repro.data import MTTaskConfig, MultilingualMT
-from repro.models import init_model
-from repro.training import init_train_state, make_eval_step, make_train_step
+from repro.training import make_eval_step
 from benchmarks.table3_throughput import step_terms
 
 
 def quality(rate: float, *, steps: int, batch: int, seed: int = 0) -> float:
+    """Final-accuracy probe per dropout rate, trained through the
+    scan-fused Trainer. traced_cond: the decision stream is the same
+    (seed, step) fold either way, and one executable per chunk length
+    keeps the 6-rate sweep's compile cost sane."""
     cfg = reduced(get_config("zcode-m3-base"))
     mode = "gate_expert_drop" if rate > 0 else "off"
     moe = dataclasses.replace(cfg.moe, gating_dropout=GatingDropoutConfig(
         mode=mode, rate=rate))
     cfg = dataclasses.replace(cfg, moe=moe)
-    task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8))
     tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
                      seed=seed)
-    state = init_train_state(init_model(jax.random.PRNGKey(seed), cfg), tc)
-    step = make_train_step(cfg, tc)
-    gd = cfg.moe.gating_dropout
-    for i in range(steps):
-        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
-             if k != "lang"}
-        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
-        state, _ = step(state, b, dec)
+    state, task, _ = run_trainer(cfg, tc, batch=batch,
+                                 strategy="traced_cond")
     ev = make_eval_step(cfg)
     vb = {k: jnp.asarray(v) for k, v in task.sample_batch(77_000, 64).items()
           if k != "lang"}

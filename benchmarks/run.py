@@ -50,6 +50,11 @@ def bench_table6(fast):
     return main(fast)
 
 
+def bench_table7(fast):
+    from benchmarks.table7_trainloop import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -90,6 +95,7 @@ BENCHES = {
     "fig6": bench_fig6,
     "table5": bench_table5,
     "table6": bench_table6,
+    "table7": bench_table7,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

@@ -11,7 +11,10 @@ paper's qualitative claims under test:
 Quality is the paper's actual metric: corpus BLEU of greedy decodes
 through the compiled engine (benchmarks/common.py::decode_bleu,
 DESIGN.md §7); steps/time-to-target are BLEU-to-target columns. Token
-accuracy is kept as a secondary signal.
+accuracy is kept as a secondary signal. Training runs through the
+scan-fused Trainer (DESIGN.md §8); eval cost (engine compile + decode)
+is excluded from the training wall clock the table compares, and tok/s
+counts ALL consumed tokens (encoder + decoder).
 """
 from __future__ import annotations
 
@@ -20,17 +23,13 @@ import json
 import time
 from typing import Dict, List
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import csv_row, decode_bleu
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import drop_decision_host
 from repro.data import MTTaskConfig, MultilingualMT
-from repro.models import init_model
-from repro.training import init_train_state, make_eval_step, make_train_step
+from repro.training import Trainer, make_eval_step
 
 METHODS = {
     "baseline":         dict(router="softmax", mode="off", rate=0.0),
@@ -56,36 +55,37 @@ def run_method(name: str, method: Dict, *, steps: int, batch: int,
     tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
                      seed=seed)
     task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8))
-    params = init_model(jax.random.PRNGKey(seed), cfg)
-    state = init_train_state(params, tc)
-    step = make_train_step(cfg, tc)
     ev = make_eval_step(cfg)
-    gd = cfg.moe.gating_dropout
+    eval_cost: List[float] = []   # wall seconds per eval, in call order
+
+    def eval_fn(state, i):
+        te = time.time()
+        vb = {k: jnp.asarray(v) for k, v in
+              task.sample_batch(10_000, 64).items() if k != "lang"}
+        em = ev(state["params"], vb)
+        bleu = decode_bleu(state["params"], cfg, task, n=32, max_new=34)
+        eval_cost.append(time.time() - te)
+        return {"val_loss": float(em["loss"]), "val_acc": float(em["acc"]),
+                "val_bleu": bleu}
+
+    # the communication cost the dropped step avoids is free in the CPU
+    # single process (wall-time gains are reported by table1); here we
+    # count steps + eval metric. Eval points land on chunk ends, so each
+    # record's boundary timestamp predates its own eval.
+    trainer = Trainer(cfg, tc, task.train_batches(batch), chunk=8,
+                      strategy="traced_cond", eval_every=eval_every,
+                      eval_fn=eval_fn, log_every=0, log=None)
+    _, history = trainer.run()
     evals: List[Dict] = []
-    tokens = 0
-    t0 = time.time()
-    t_eval = 0.0      # eval (incl. engine compile + decode) excluded from
-                      # the training wall clock the table compares
-    for i in range(steps):
-        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
-             if k != "lang"}
-        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
-        # simulate the communication cost the dropped step avoids: on the
-        # CPU single process the a2a is free, so wall-time gains are
-        # reported separately by table1; here we count steps + eval metric
-        state, m = step(state, b, dec)
-        tokens += int(b["tokens"].size)
-        if i % eval_every == 0 or i == steps - 1:
-            te = time.time()
-            vb = {k: jnp.asarray(v) for k, v in
-                  task.sample_batch(10_000, 64).items() if k != "lang"}
-            em = ev(state["params"], vb)
-            bleu = decode_bleu(state["params"], cfg, task, n=32, max_new=34)
-            t_eval += time.time() - te
-            evals.append({"step": i, "val_loss": float(em["loss"]),
-                          "val_acc": float(em["acc"]), "val_bleu": bleu,
-                          "time_s": time.time() - t0 - t_eval})
-    dt = time.time() - t0 - t_eval
+    for idx, rec in enumerate(r for r in history if "val_bleu" in r):
+        # training-only clock: boundary timestamp minus eval time accrued
+        # at earlier boundaries (the seed-era t_eval bookkeeping)
+        evals.append({"step": rec["step"], "val_loss": rec["val_loss"],
+                      "val_acc": rec["val_acc"], "val_bleu": rec["val_bleu"],
+                      "time_s": rec["time_s"] - sum(eval_cost[:idx])})
+    dt = history[-1]["time_s"] - sum(eval_cost[:-1])
+    b0 = task.train_batches(batch)(0)
+    tokens = steps * (b0["tokens"].size + b0["enc_tokens"].size)
     return {"method": name, "evals": evals, "tok_s": tokens / dt,
             "final_acc": evals[-1]["val_acc"],
             "final_bleu": evals[-1]["val_bleu"],

@@ -2,19 +2,25 @@
 Gate-Expert-Drop on two clusters (V100 + 100Gb IB vs A100 + 1.6Tb IB).
 
 Analytic roofline model of the zcode-m3-big MoE training step per method
-per hardware profile. The paper's qualitative claim under test: the
-RELATIVE improvement from Gating Dropout is larger on the slower
-(more communication-bound) cluster.
+per hardware profile, plus a MEASURED column: real steps/s of the
+scan-fused Trainer (DESIGN.md §8) on the reduced CPU config per method.
+The paper's qualitative claim under test: the RELATIVE improvement from
+Gating Dropout is larger on the slower (more communication-bound)
+cluster. (The measured CPU column only reflects Gate-Expert-Drop's FLOP
+savings — in-process the all-to-all is free, so gate_drop measures ~1x.)
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import time
 
-from benchmarks.common import A100_IB, TPU_V5E, V100_IB, HwProfile, csv_row
-from repro.configs import get_config
+from benchmarks.common import (A100_IB, TPU_V5E, V100_IB, HwProfile, csv_row,
+                               run_trainer)
+from repro.configs import get_config, reduced
+from repro.configs.base import GatingDropoutConfig, TrainConfig
 from repro.core.gating_dropout import (expected_alltoall_fraction,
                                        expected_expert_flop_fraction)
-from repro.configs.base import GatingDropoutConfig
 
 SEQ = 1024
 GLOBAL_TOKENS = 435_000         # paper batch: 435k tokens
@@ -41,6 +47,37 @@ def throughput(cfg, hw, gd: GatingDropoutConfig, n=N_DEVICES):
     t = (t_c * expected_expert_flop_fraction(gd)
          + t_a * expected_alltoall_fraction(gd))
     return GLOBAL_TOKENS / t
+
+
+def measured_reduced(methods, *, steps: int, batch: int, seq: int = 16,
+                     chunk: int = 8):
+    """Measured steps/s per method: the scan-fused Trainer on the reduced
+    CPU config (traced_cond, one executable per chunk length).
+
+    History records carry the wall time of their enclosing chunk
+    boundary, so (steps - chunk) / (t_last - t_first_boundary) measures
+    every chunk after the first — compile time excluded."""
+    out = {}
+    for name, gd in methods.items():
+        cfg = reduced(get_config("zcode-m3-base"))
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, gating_dropout=gd))
+        tc = TrainConfig(lr=1e-3, warmup_steps=10, steps=steps, seed=0)
+        t0 = time.time()
+        _, _, hist = run_trainer(cfg, tc, batch=batch, seq=seq, chunk=chunk,
+                                 strategy="traced_cond")
+        wall = time.time() - t0
+        assert hist[0]["step"] < chunk <= tc.steps - chunk
+        span = max(hist[-1]["time_s"] - hist[0]["time_s"], 1e-9)
+        sps = (tc.steps - chunk) / span
+        # keep tok_s on the same (compile-excluded) clock as steps_s
+        tokens_per_step = hist[-1]["tok_s"] * hist[-1]["time_s"] / tc.steps
+        tok_s = sps * tokens_per_step
+        out[name] = {"steps_s": sps, "tok_s": tok_s,
+                     "wall_s_incl_compile": wall}
+        csv_row(f"table3/measured-reduced-cpu/{name}", 1e6 / sps,
+                f"steps_s={sps:.2f};tok_s={tok_s:.0f}")
+    return out
 
 
 def main(fast: bool = True):
@@ -70,6 +107,8 @@ def main(fast: bool = True):
             csv_row(f"table3/{hw.name}/{m}", 1e6 * GLOBAL_TOKENS / tp,
                     f"model_tok_s={tp:.0f};rel={rel:.1f}%"
                     + (f";paper_rel={prel:.1f}%" if prel is not None else ""))
+    out["measured_reduced_cpu"] = measured_reduced(
+        methods, steps=24 if fast else 48, batch=4 if fast else 8)
     return out
 
 

@@ -13,17 +13,14 @@ import dataclasses
 import json
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, decode_bleu
+from benchmarks.common import csv_row, decode_bleu, run_trainer
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import drop_decision_host
 from repro.data import MTTaskConfig, MultilingualMT
-from repro.models import init_model
-from repro.training import init_train_state, make_eval_step, make_train_step
+from repro.training import make_eval_step
 
 
 def train_and_eval(mode: str, rate: float, *, steps: int, batch: int,
@@ -37,14 +34,10 @@ def train_and_eval(mode: str, rate: float, *, steps: int, batch: int,
     task = MultilingualMT(tcfg)
     tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
                      seed=seed)
-    state = init_train_state(init_model(jax.random.PRNGKey(seed), cfg), tc)
-    step = make_train_step(cfg, tc)
-    gd = cfg.moe.gating_dropout
-    for i in range(steps):
-        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
-             if k != "lang"}
-        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
-        state, _ = step(state, b, dec)
+    # train through the scan-fused Trainer (DESIGN.md §8); the decision
+    # stream is the same (seed, step) fold the per-step loop drew
+    state, _, _ = run_trainer(cfg, tc, batch=batch, task=task,
+                              strategy="traced_cond")
     ev = make_eval_step(cfg)
     per_lang = {}
     per_lang_bleu = {}

@@ -1,0 +1,139 @@
+"""Beyond paper — Table 7: scan-fused Trainer vs the legacy per-step loop.
+
+Head-to-head on the reduced CPU zcode-m3-base config with gate_drop 0.3:
+
+  legacy — the seed-era hot loop, faithfully: one jitted dispatch per
+      step, per-step loop-based batch synthesis (sample_batch_loop), a
+      host-side consensus draw per step, jnp conversion per step.
+  fused  — the Trainer (DESIGN.md §8): lax.scan over --chunk steps in one
+      executable (traced_cond: consensus bits precomputed in-graph),
+      double-buffered prefetch over vectorized synthesis, metrics fetched
+      at chunk boundaries only.
+
+Both see the SAME decision stream ((seed, step) fold) and the SAME data
+stream; final-loss parity is asserted. Writes
+benchmarks/artifacts/table7_trainloop.json; acceptance bar: fused
+steps/s >= 1.3x legacy on this config.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import ART, csv_row
+from repro.configs import get_config, reduced
+from repro.configs.base import GatingDropoutConfig, TrainConfig
+from repro.core.gating_dropout import drop_decision_host
+from repro.data import MTTaskConfig, MultilingualMT
+from repro.models import init_model
+from repro.training import Trainer, init_train_state, make_train_step
+
+import dataclasses
+
+# Small per-step device work ON PURPOSE: the quantity under test is the
+# HOST loop (per-step dispatch + eager consensus draw + input stalls),
+# which is a fixed per-step cost. The reduced config keeps the zcode
+# topology (enc-dec, MoE every other layer, gate_drop 0.3) but narrows
+# the widths via reduced() overrides until the device step lands in the
+# single-digit-ms range — the regime of a real accelerator, where this
+# whole model's step is sub-millisecond. At full reduced width the CPU
+# step is ~50ms on a 2-core container and the host loop (~6ms/step)
+# vanishes in the noise: that shape measures this container's matmul
+# throughput, not the loop under test.
+BATCH, SEQ, CHUNK = 2, 10, 16
+
+
+def _setup(steps: int):
+    cfg = reduced(get_config("zcode-m3-base"), d_model=64, d_ff=128,
+                  vocab=256, n_heads=2, n_kv_heads=2, head_dim=32)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, d_ff_expert=128,
+        gating_dropout=GatingDropoutConfig(mode="gate_drop", rate=0.3)))
+    tc = TrainConfig(lr=1e-3, warmup_steps=10, steps=steps, seed=0)
+    task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8,
+                                       max_len=SEQ, src_len=(4, 8)))
+    return cfg, tc, task
+
+
+def run_legacy(steps: int):
+    """The seed-era loop: per-step dispatch, per-step host draw, per-step
+    loop-based synthesis. Warm both executables first; timing covers the
+    steady-state loop only."""
+    cfg, tc, task = _setup(steps)
+    gd = cfg.moe.gating_dropout
+    step = make_train_step(cfg, tc)
+
+    def batch(i):
+        return {k: jnp.asarray(v)
+                for k, v in task.sample_batch_loop(i, BATCH).items()
+                if k != "lang"}
+
+    state = init_train_state(init_model(jax.random.PRNGKey(tc.seed), cfg), tc)
+    for dec in (False, True):     # compile both executables off the clock
+        state, _ = step(state, batch(0), dec)   # donated: chain the states
+    jax.block_until_ready(state)
+    state = init_train_state(init_model(jax.random.PRNGKey(tc.seed), cfg), tc)
+    t0 = time.perf_counter()
+    m = None
+    for i in range(steps):
+        state, m = step(state, batch(i), drop_decision_host(gd, tc.seed, i))
+    loss = float(m["loss"])       # final host sync, like the seed launcher
+    wall = time.perf_counter() - t0
+    return steps / wall, loss
+
+
+def run_fused(steps: int):
+    """The Trainer. jit caches are per-chunk_fn, so the warmup pass must
+    reuse the same Trainer: measure steady-state chunks via the history's
+    boundary timestamps (every chunk after the first)."""
+    cfg, tc, task = _setup(steps)
+    tr = Trainer(cfg, tc, task.train_batches(BATCH), chunk=CHUNK,
+                 strategy="traced_cond", log=None, log_every=1)
+    _, hist = tr.run()
+    first_boundary = next(r for r in hist if r["step"] == CHUNK - 1)
+    span = hist[-1]["time_s"] - first_boundary["time_s"]
+    return (steps - CHUNK) / max(span, 1e-9), hist[-1]["loss"]
+
+
+def main(fast: bool = True):
+    steps = 48 if fast else 80
+    assert steps % CHUNK == 0
+    legacy_sps, legacy_loss = run_legacy(steps)
+    fused_sps, fused_loss = run_fused(steps)
+    speedup = fused_sps / legacy_sps
+    # same decisions, same data: traced lax.cond vs the baked branch only
+    # differ in kernel fusion (~1e-6/step), so after `steps` updates the
+    # final losses must still agree to ~1e-3 relative. (Exact BITWISE
+    # chunk parity is asserted separately in tests/test_trainer.py.)
+    assert abs(fused_loss - legacy_loss) < 2e-3 * max(abs(legacy_loss), 1.0), \
+        (fused_loss, legacy_loss)
+    # the acceptance bar this table exists to hold (measured ~2x; 1.3 with
+    # margin for machine noise)
+    assert speedup >= 1.3, f"fused only {speedup:.2f}x over legacy"
+    out = {
+        "config": {"arch": "zcode-m3-base(reduced, d_model=64)",
+                   "batch": BATCH, "seq": SEQ, "chunk": CHUNK,
+                   "steps": steps, "gd": "gate_drop@0.3"},
+        "legacy_steps_s": legacy_sps,
+        "fused_steps_s": fused_sps,
+        "speedup": speedup,
+        "legacy_final_loss": legacy_loss,
+        "fused_final_loss": fused_loss,
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table7_trainloop.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    csv_row("table7/legacy-per-step", 1e6 / legacy_sps,
+            f"steps_s={legacy_sps:.2f}")
+    csv_row("table7/fused-chunk", 1e6 / fused_sps,
+            f"steps_s={fused_sps:.2f};speedup={speedup:.2f}x;"
+            f"loss_parity={abs(fused_loss - legacy_loss):.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

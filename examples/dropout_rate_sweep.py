@@ -6,16 +6,13 @@ import argparse
 import dataclasses
 import json
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import (drop_decision_host,
-                                       expected_alltoall_fraction)
+from repro.core.gating_dropout import expected_alltoall_fraction
 from repro.data import MTTaskConfig, MultilingualMT
-from repro.models import init_model
-from repro.training import init_train_state, make_eval_step, make_train_step
+from repro.training import Trainer, make_eval_step
 
 
 def run(rate, mode, steps, batch, seed=0):
@@ -23,15 +20,12 @@ def run(rate, mode, steps, batch, seed=0):
     gd = GatingDropoutConfig(mode=mode if rate > 0 else "off", rate=rate)
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, gating_dropout=gd))
-    tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), seed=seed)
+    tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
+                     seed=seed)
     task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8))
-    state = init_train_state(init_model(jax.random.PRNGKey(seed), cfg), tc)
-    step = make_train_step(cfg, tc)
-    for i in range(steps):
-        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
-             if k != "lang"}
-        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
-        state, _ = step(state, b, dec)
+    trainer = Trainer(cfg, tc, task.train_batches(batch),
+                      chunk=10, strategy="traced_cond", log=None)
+    state, _ = trainer.run()
     ev = make_eval_step(cfg)
     vb = {k: jnp.asarray(v) for k, v in task.sample_batch(10_000, 64).items()
           if k != "lang"}

@@ -5,16 +5,13 @@ a few steps on the synthetic multilingual task, and greedy-decode.
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import drop_decision_host
 from repro.data import MTTaskConfig, MultilingualMT
-from repro.models import init_model
 from repro.serve import GenerateConfig, generate
-from repro.training import init_train_state, make_train_step
+from repro.training import Trainer
 
 # 1. Config: the paper's Z-code-M3-base family at toy scale, with Gate-Drop
 cfg = reduced(get_config("zcode-m3-base"))
@@ -26,19 +23,15 @@ print(f"arch={cfg.arch_id}: {cfg.moe.n_experts} experts, "
 # 2. Data: deterministic synthetic multilingual MT
 task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=4))
 
-# 3. Train with the paper's host_cond strategy: per-step consensus bit via
-#    the shared (seed, step) PRNG — the dropped executable has NO all-to-all
+# 3. Train through the scan-fused Trainer (DESIGN.md §8): 10 steps per
+#    compiled dispatch, consensus bits precomputed in-graph from the shared
+#    (seed, step) PRNG, batches prefetched on a background thread.
+#    (`python -m repro.launch.train --strategy host_cond` runs the
+#    paper-faithful two-executable dispatch instead.)
 tc = TrainConfig(lr=2e-3, warmup_steps=20, steps=100, seed=0)
-state = init_train_state(init_model(jax.random.PRNGKey(0), cfg), tc)
-step = make_train_step(cfg, tc)
-for i in range(100):
-    batch = {k: jnp.asarray(v) for k, v in task.sample_batch(i, 16).items()
-             if k != "lang"}
-    dropped = drop_decision_host(cfg.moe.gating_dropout, tc.seed, i)
-    state, m = step(state, batch, dropped)
-    if i % 20 == 0 or i == 99:
-        print(f"step {i:3d} loss={float(m['loss']):.3f} "
-              f"acc={float(m['acc']):.3f} dropped={dropped}")
+trainer = Trainer(cfg, tc, task.train_batches(16),
+                  chunk=10, strategy="traced_cond", log_every=20)
+state, history = trainer.run()
 
 # 4. Greedy decode one source sentence through the compiled engine
 #    (repro.serve, DESIGN.md §7: prefill + decode loop in one executable)

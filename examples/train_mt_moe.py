@@ -13,17 +13,14 @@ import dataclasses
 import json
 import time
 
-import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import drop_decision_host
+from repro.core.gating_dropout import drop_decisions_host
 from repro.data import MTTaskConfig, MultilingualMT
 from repro.launch.train import greedy_bleu
-from repro.models import init_model
-from repro.training import init_train_state, make_eval_step, make_train_step
+from repro.training import Trainer, make_eval_step
 
 
 def build_cfg(big: bool, gd_mode: str, gd_rate: float):
@@ -44,33 +41,28 @@ def run(name, cfg, steps, batch, seed=0, ckpt=None):
     tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 20), steps=steps,
                      seed=seed)
     task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8))
-    state = init_train_state(init_model(jax.random.PRNGKey(seed), cfg), tc)
-    step = make_train_step(cfg, tc)
-    ev = make_eval_step(cfg)
     gd = cfg.moe.gating_dropout
     t0 = time.time()
-    n_drop = 0
-    for i in range(steps):
-        b = {k: jnp.asarray(v) for k, v in task.sample_batch(i, batch).items()
-             if k != "lang"}
-        dec = drop_decision_host(gd, seed, i) if gd.enabled else False
-        n_drop += int(dec)
-        state, m = step(state, b, dec)
-        if i % max(steps // 10, 1) == 0:
-            print(f"[{name}] step {i:4d} loss={float(m['loss']):.3f} "
-                  f"acc={float(m['acc']):.3f}")
+    # train through the scan-fused Trainer (DESIGN.md §8); checkpointing
+    # and logging are the Trainer's job now
+    trainer = Trainer(
+        cfg, tc, task.train_batches(batch),
+        chunk=10, strategy="traced_cond", ckpt_dir=ckpt,
+        ckpt_meta={"method": name},
+        log_every=max(steps // 10, 1),
+        log=lambda s: print(f"[{name}] {s}"))
+    state, history = trainer.run()
     wall = time.time() - t0
+    n_drop = int(drop_decisions_host(gd, seed, 0, steps).sum())
+    ev = make_eval_step(cfg)
     vb = {k: jnp.asarray(v) for k, v in task.sample_batch(10_000, 64).items()
           if k != "lang"}
     em = ev(state["params"], vb)
     bleu = greedy_bleu(state["params"], cfg, task)
-    if ckpt:
-        save_checkpoint(ckpt, steps, state, {"arch": cfg.arch_id,
-                                             "method": name})
     res = {"method": name, "val_loss": float(em["loss"]),
            "val_acc": float(em["acc"]), "bleu_proxy": bleu,
            "wall_s": wall, "dropped_steps": n_drop,
-           "tok_s": steps * batch * 32 / wall}
+           "tok_s": history[-1]["tok_s"]}
     print(f"[{name}] {json.dumps(res)}")
     return res
 

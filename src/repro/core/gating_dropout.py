@@ -53,6 +53,28 @@ def drop_decision_host(cfg: GatingDropoutConfig, seed: int, step: int, *,
     return bool(np.asarray(jax.random.bernoulli(decision_key(seed, step), cfg.rate)))
 
 
+@jax.jit
+def _decisions_batch(seed: jax.Array, steps: jax.Array,
+                     rate: jax.Array) -> jax.Array:
+    key = jax.random.PRNGKey(seed ^ 0x6A7E_D0)
+    return jax.vmap(
+        lambda s: jax.random.bernoulli(jax.random.fold_in(key, s), rate)
+    )(steps)
+
+
+def drop_decisions_host(cfg: GatingDropoutConfig, seed: int, start: int,
+                        stop: int, *, is_training: bool = True) -> np.ndarray:
+    """Concrete bools for steps [start, stop) in ONE jitted dispatch —
+    bitwise the per-step ``drop_decision_host`` draws (same (seed, step)
+    fold, vmapped). The scan-fused Trainer's host_cond path uses this so
+    drawing a chunk's bits never costs per-step eager dispatches."""
+    n = max(stop - start, 0)
+    if not is_training or not cfg.enabled or n == 0:
+        return np.zeros(n, bool)
+    return np.asarray(_decisions_batch(seed, jnp.arange(start, stop),
+                                       cfg.rate))
+
+
 def expected_alltoall_fraction(cfg: GatingDropoutConfig) -> float:
     """Fraction of steps that still pay the all-to-all: 1 - p (both modes)."""
     return 1.0 - (cfg.rate if cfg.enabled else 0.0)

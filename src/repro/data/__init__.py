@@ -1,5 +1,6 @@
 from repro.data.pipeline import (BOS, EOS, PAD, LMTaskConfig, MTTaskConfig,
                                  MultilingualMT, SyntheticLM)
+from repro.data.prefetch import Prefetcher, stack_batches
 
 __all__ = ["BOS", "EOS", "PAD", "LMTaskConfig", "MTTaskConfig",
-           "MultilingualMT", "SyntheticLM"]
+           "MultilingualMT", "Prefetcher", "SyntheticLM", "stack_batches"]

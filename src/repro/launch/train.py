@@ -3,49 +3,42 @@
   PYTHONPATH=src python -m repro.launch.train --arch zcode-m3-base --reduced \
       --steps 200 --batch 16 --task mt --gd-mode gate_drop --gd-rate 0.3
 
-Runs on CPU at reduced scale (or on a real mesh via --mesh d,m). Uses the
-paper's host_cond strategy by default: two executables, the dropped one
-free of all-to-all; the per-step consensus bit comes from the shared
-(seed, step) PRNG fold — see DESIGN.md §2.
+Runs on CPU at reduced scale (or on a real mesh via --mesh d,m). Training
+executes through the scan-fused Trainer (DESIGN.md §8): `--chunk` steps
+per compiled dispatch, prefetched input pipeline, metrics fetched at
+chunk boundaries only. Uses the paper's host_cond strategy by default
+(`--strategy`): same-decision runs dispatch to two executables, the
+dropped one free of all-to-all; the per-step consensus bit comes from
+the shared (seed, step) PRNG fold — see DESIGN.md §2.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
-import os
-import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.configs.base import GatingDropoutConfig, TrainConfig
-from repro.core.gating_dropout import drop_decision_host
+from repro.configs.base import TrainConfig
 from repro.core.moe import ParallelContext
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import MTTaskConfig, MultilingualMT, LMTaskConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.metrics import corpus_bleu, strip_special
-from repro.models import init_model
 from repro.serve import GenerateConfig, generate
-from repro.training import init_train_state, make_eval_step, make_train_step
+from repro.training import Trainer
 
 
 def build_batch_fn(cfg, args):
+    """Per-step numpy batches (the Trainer stacks them into chunks; keep
+    this pure host work — it runs on the prefetch thread)."""
     if args.task == "mt":
         task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=args.langs,
                                            max_len=args.seq))
-        def fn(step):
-            b = task.sample_batch(step, args.batch)
-            return {k: jnp.asarray(v) for k, v in b.items() if k != "lang"}
-        return task, fn
+        return task, task.train_batches(args.batch)
     task = SyntheticLM(LMTaskConfig(vocab=cfg.vocab, seq_len=args.seq))
-    def fn(step):
-        return {k: jnp.asarray(v) for k, v in
-                task.sample_batch(step, args.batch).items()}
-    return task, fn
+    return task, lambda step: task.sample_batch(step, args.batch)
 
 
 def greedy_bleu(params, cfg, task, *, n=32, max_new=36, seed=10_000,
@@ -82,7 +75,22 @@ def main():
     ap.add_argument("--task", default="mt", choices=["mt", "lm"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--schedule", default="inverse_sqrt",
+                    choices=["inverse_sqrt", "cosine", "constant"],
+                    help="LR schedule (optim/adam.py)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches per step "
+                         "(--batch must divide evenly)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="steps per scan-fused train dispatch (DESIGN.md §8)")
+    ap.add_argument("--strategy", default="host_cond",
+                    choices=["traced_cond", "host_cond"],
+                    help="gating-dropout execution strategy (DESIGN.md §5); "
+                         "host_cond is paper-faithful")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="synthesize chunks inline instead of on the "
+                         "background prefetch thread")
     ap.add_argument("--gd-mode", default=None,
                     choices=[None, "off", "gate_drop", "gate_expert_drop"])
     ap.add_argument("--gd-rate", type=float, default=None)
@@ -123,47 +131,28 @@ def main():
         ctx = ParallelContext(mesh=make_mesh(shape, ("data", "model")[:len(shape)]))
 
     tc = TrainConfig(lr=args.lr, warmup_steps=args.warmup, steps=args.steps,
-                     seed=args.seed)
+                     seed=args.seed, schedule=args.schedule,
+                     microbatches=args.microbatches)
     task, batch_fn = build_batch_fn(cfg, args)
-    params = init_model(jax.random.PRNGKey(args.seed), cfg)
-    state = init_train_state(params, tc)
-    start_step = 0
+    eval_fn = None
+    if args.eval_every and args.task == "mt":
+        eval_fn = lambda state, step: {  # noqa: E731
+            "bleu": greedy_bleu(state["params"], cfg, task, ctx=ctx)}
+    trainer = Trainer(cfg, tc, batch_fn, ctx=ctx, chunk=args.chunk,
+                      strategy=args.strategy, ckpt_dir=args.ckpt_dir,
+                      eval_every=args.eval_every, eval_fn=eval_fn,
+                      log_every=args.log_every,
+                      prefetch=not args.no_prefetch)
     if args.resume:
         assert args.ckpt_dir, "--resume needs --ckpt-dir"
-        assert latest_step(args.ckpt_dir) is not None, \
-            f"--resume: no checkpoint in {args.ckpt_dir}"
-        state, meta = restore_checkpoint(args.ckpt_dir, state)
-        start_step = int(meta["step"])
-        print(f"resumed {args.ckpt_dir} @ step {start_step}")
-    step_fn = make_train_step(cfg, tc, ctx)
-    gd = cfg.moe.gating_dropout if cfg.moe is not None else None
-
-    history = []
-    t0 = time.time()
-    tokens_done = 0
-    # the loop index is the ABSOLUTE step: after --resume both the data
-    # stream (batch_fn) and the Gating-Dropout consensus PRNG (seed, step)
-    # continue exactly where the checkpointed run left off (DESIGN.md §2)
-    for i in range(start_step, args.steps):
-        batch = batch_fn(i)
-        dec = drop_decision_host(gd, args.seed, i) if gd and gd.enabled else False
-        state, m = step_fn(state, batch, bool(dec))
-        tokens_done += int(batch["tokens"].size)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            el = time.time() - t0
-            rec = {"step": i, "loss": float(m["loss"]), "acc": float(m["acc"]),
-                   "tok_s": tokens_done / max(el, 1e-9), "time_s": el}
-            if "balance" in m:
-                rec["balance"] = float(m["balance"])
-            if args.eval_every and args.task == "mt" and \
-                    (i % args.eval_every == 0 or i == args.steps - 1):
-                rec["bleu"] = greedy_bleu(state["params"], cfg, task, ctx=ctx)
-            history.append(rec)
-            print(json.dumps(rec))
+        # restore() continues at the ABSOLUTE step: after --resume both the
+        # data stream (batch_fn) and the Gating-Dropout consensus PRNG
+        # (seed, step) pick up exactly where the checkpointed run left off
+        print(f"resumed {args.ckpt_dir} @ step {trainer.restore()}")
+    state, history = trainer.run()
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps, state,
-                        {"arch": cfg.arch_id})
         print(f"checkpoint -> {args.ckpt_dir}")
+    gd = cfg.moe.gating_dropout if cfg.moe is not None else None
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump({"arch": cfg.arch_id, "history": history,

@@ -1,0 +1,268 @@
+"""Scan-fused Trainer — THE training loop of the repo (DESIGN.md §8).
+
+Seed-era training dispatched one jitted step per Python-loop iteration:
+a per-step executable dispatch, a host-side consensus draw (three eager
+jax calls), per-step batch synthesis, and a host sync per log interval.
+The paper's claim is *wall-clock* convergence, so the host loop must not
+be part of the measurement. The Trainer executes training as CHUNKS
+instead: ``lax.scan`` over K steps inside a single jit, per-step metrics
+accumulated on-device and fetched once per chunk, fed by the
+double-buffered background prefetcher (``repro.data.prefetch``) over
+vectorized batch synthesis (``repro.data.pipeline``).
+
+Decision semantics — both bitwise-faithful to K legacy per-step calls
+(asserted in ``tests/test_trainer.py``):
+
+  traced_cond — the chunk precomputes the K consensus bits IN-GRAPH as a
+      length-K vector: ``vmap`` of ``drop_decision`` over
+      (seed, absolute_step) — the identical fold the per-step path uses,
+      so the bits agree bitwise and stay traced (``lax.cond`` per step).
+  host_cond  — the host draws the K bits (``drop_decision_host``), splits
+      the chunk into MAXIMAL SAME-DECISION RUNS, and dispatches each run
+      to a scan-fused executable whose decision is a static argument:
+      the dropped run executable still contains zero all-to-alls
+      (``tests/test_trainer.py::test_dropped_chunk_executable_has_no_alltoall``).
+      jit caches one executable per (decision, run-length), so a chunk of
+      K steps costs at most 2K compiles over a whole run.
+
+Eval points are forced onto chunk ends by the schedule, so ``eval_fn``
+always sees exactly the post-step params the legacy loop evaluated.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.gating_dropout import drop_decision, drop_decisions_host
+from repro.core.moe import ParallelContext
+from repro.data.prefetch import Prefetcher, stack_batches
+from repro.models import init_model
+from repro.training.steps import init_train_state, make_train_step
+
+# tokens a step consumes: decoder tokens AND (for enc-dec tasks) encoder
+# tokens — counting only "tokens" undercounted MT throughput ~2x
+TOKEN_KEYS = ("tokens", "enc_tokens")
+
+
+def make_chunk_step(cfg: ModelConfig, tc: TrainConfig,
+                    ctx: Optional[ParallelContext] = None,
+                    *, jit: bool = True) -> Callable:
+    """Returns chunk_fn(state, batches, decision) -> (state, metrics).
+
+    ``batches``: pytree with a leading K axis (``stack_batches``).
+    ``metrics``: the per-step metric dict stacked to (K, ...) — fetched by
+    the caller once per chunk, never per step.
+    ``decision``:
+      None -> traced_cond: the K consensus bits are computed in-graph
+              from (seed, absolute_step) as a length-K traced vector.
+      bool -> host_cond run: baked in as a static argument; jit caches
+              one executable per (decision, K). With the decision static
+              the dropped executable contains no all-to-all at all.
+    """
+    step_fn = make_train_step(cfg, tc, ctx, jit=False)
+    gd = cfg.moe.gating_dropout if cfg.moe is not None else None
+    use_gd = gd is not None and gd.enabled
+
+    def chunk_fn(state, batches, decision):
+        k = jax.tree.leaves(batches)[0].shape[0]
+        if decision is None and use_gd:
+            steps = state["step"] + jnp.arange(k, dtype=state["step"].dtype)
+            decs = jax.vmap(lambda s: drop_decision(gd, tc.seed, s))(steps)
+
+            def body(s, xs):
+                b, d = xs
+                return step_fn(s, b, d)
+
+            return jax.lax.scan(body, state, (batches, decs))
+
+        dec = bool(decision) if decision is not None else False
+
+        def body(s, b):
+            return step_fn(s, b, dec)
+
+        return jax.lax.scan(body, state, batches)
+
+    if jit:
+        return jax.jit(chunk_fn, static_argnums=(2,), donate_argnums=(0,))
+    return chunk_fn
+
+
+def same_decision_runs(gd, seed: int, lo: int, hi: int
+                       ) -> List[Tuple[int, int, bool]]:
+    """Split [lo, hi) into maximal runs of equal host-drawn consensus bits:
+    [(start, stop, decision), ...] covering the span in order. The bits
+    come from ONE batched draw (``drop_decisions_host``), not per-step
+    eager dispatches."""
+    if gd is None or not gd.enabled:
+        return [(lo, hi, False)]
+    decs = [bool(d) for d in drop_decisions_host(gd, seed, lo, hi)]
+    runs, i = [], 0
+    while i < len(decs):
+        j = i
+        while j < len(decs) and decs[j] == decs[i]:
+            j += 1
+        runs.append((lo + i, lo + j, decs[i]))
+        i = j
+    return runs
+
+
+class Trainer:
+    """Owns a training run: state, data, chunked execution, checkpointing,
+    eval, logging, and resume.
+
+    Parameters
+    ----------
+    batch_fn : step -> dict of numpy arrays (one per-step batch). Called
+        from the prefetch thread; must be pure host work (no jax).
+    chunk : steps fused per dispatch (K). Eval points shorten individual
+        chunks so they land on chunk ends.
+    strategy : "traced_cond" | "host_cond" | None (None = follow
+        ``cfg.moe.gating_dropout.strategy``; DESIGN.md §5).
+    eval_fn : (state, step) -> dict merged into that step's history
+        record; runs at chunk ends only.
+    log : callable for per-record lines (default: print as JSON); None
+        disables printing (history is still returned).
+    """
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 batch_fn: Callable[[int], Dict[str, np.ndarray]], *,
+                 ctx: Optional[ParallelContext] = None,
+                 params: Any = None,
+                 chunk: int = 8,
+                 strategy: Optional[str] = None,
+                 ckpt_dir: Optional[str] = None,
+                 ckpt_meta: Optional[Dict] = None,
+                 eval_every: int = 0,
+                 eval_fn: Optional[Callable[[Any, int], Dict]] = None,
+                 log_every: int = 20,
+                 prefetch: bool = True,
+                 prefetch_depth: int = 2,
+                 log: Optional[Callable[[str], None]] = print):
+        self.cfg, self.tc, self.ctx = cfg, tc, ctx
+        self.batch_fn = batch_fn
+        self.chunk = max(int(chunk), 1)
+        gd = cfg.moe.gating_dropout if cfg.moe is not None else None
+        self.gd = gd if (gd is not None and gd.enabled) else None
+        self.strategy = strategy or (self.gd.strategy if self.gd
+                                     else "traced_cond")
+        assert self.strategy in ("traced_cond", "host_cond"), self.strategy
+        self.ckpt_dir, self.ckpt_meta = ckpt_dir, ckpt_meta
+        self.eval_every, self.eval_fn = eval_every, eval_fn
+        self.log_every, self.log = log_every, log
+        self.prefetch, self.prefetch_depth = prefetch, prefetch_depth
+        if params is None:
+            params = init_model(jax.random.PRNGKey(tc.seed), cfg)
+        self.state = init_train_state(params, tc)
+        self.start_step = 0
+        self.history: List[Dict] = []
+        self.chunk_fn = make_chunk_step(cfg, tc, ctx)
+
+    # ---- resume -----------------------------------------------------------
+    def restore(self) -> int:
+        """Restore params + opt + step from ``ckpt_dir`` and continue at
+        the ABSOLUTE step: both the data stream (batch_fn) and the
+        consensus PRNG (seed, step) pick up exactly where the
+        checkpointed run left off (DESIGN.md §2)."""
+        assert self.ckpt_dir, "restore() needs ckpt_dir"
+        assert latest_step(self.ckpt_dir) is not None, \
+            f"restore: no checkpoint in {self.ckpt_dir}"
+        self.state, meta = restore_checkpoint(self.ckpt_dir, self.state)
+        self.start_step = int(meta["step"])
+        return self.start_step
+
+    # ---- schedule ---------------------------------------------------------
+    def _eval_steps(self) -> set:
+        if not self.eval_every or self.eval_fn is None:
+            return set()
+        return ({i for i in range(self.tc.steps) if i % self.eval_every == 0}
+                | {self.tc.steps - 1})
+
+    def _record_steps(self) -> set:
+        rec = {self.tc.steps - 1} | self._eval_steps()
+        if self.log_every:
+            rec |= {i for i in range(self.tc.steps)
+                    if i % self.log_every == 0}
+        return rec
+
+    def schedule(self) -> List[Tuple[int, int]]:
+        """Chunk spans [s, e) covering [start_step, steps): at most
+        ``chunk`` long, cut so every eval step is a chunk's LAST step."""
+        ends = sorted({i + 1 for i in self._eval_steps()} | {self.tc.steps})
+        spans, s = [], self.start_step
+        for e in ends:
+            while s < e:
+                spans.append((s, min(s + self.chunk, e)))
+                s = spans[-1][1]
+        return spans
+
+    # ---- run --------------------------------------------------------------
+    def _dispatch(self, span: Tuple[int, int], stacked: Dict
+                  ) -> Dict[str, np.ndarray]:
+        """Run one chunk; returns per-step metrics stacked over the span
+        (the chunk's ONLY host-device sync, via np.asarray)."""
+        s, e = span
+        if self.strategy == "traced_cond":
+            dev = {k: jnp.asarray(v) for k, v in stacked.items()}
+            self.state, ms = self.chunk_fn(self.state, dev, None)
+            parts = [ms]
+        else:
+            parts = []
+            for rs, re, dec in same_decision_runs(self.gd, self.tc.seed, s, e):
+                sub = {k: jnp.asarray(v[rs - s:re - s])
+                       for k, v in stacked.items()}
+                self.state, m = self.chunk_fn(self.state, sub, dec)
+                parts.append(m)
+        return {k: np.concatenate([np.asarray(p[k]) for p in parts])
+                for k in parts[0]}
+
+    def run(self) -> Tuple[Any, List[Dict]]:
+        tc = self.tc
+        spans = self.schedule()
+        fetch = lambda span: stack_batches(self.batch_fn, *span)  # noqa: E731
+        it = (Prefetcher(fetch, spans, self.prefetch_depth)
+              if self.prefetch else map(fetch, spans))
+        rec_steps, eval_steps = self._record_steps(), self._eval_steps()
+        tokens_done, t0 = 0, time.time()
+        try:
+            for span, stacked in zip(spans, it):
+                s, e = span
+                tok_per_step = sum(int(stacked[k][0].size)
+                                   for k in TOKEN_KEYS if k in stacked)
+                ms = self._dispatch(span, stacked)
+                el = time.time() - t0
+                tokens_done += (e - s) * tok_per_step
+                for i in range(s, e):
+                    if i not in rec_steps:
+                        continue
+                    j = i - s
+                    # tok_s pairs the CHUNK-complete token count with the
+                    # chunk-boundary timestamp (el) — same convention as
+                    # time_s; pro-rating tokens to step i against el would
+                    # understate mid-chunk throughput
+                    rec = {"step": i, "loss": float(ms["loss"][j]),
+                           "acc": float(ms["acc"][j]),
+                           "lr": float(ms["lr"][j]),
+                           "tok_s": tokens_done / max(el, 1e-9),
+                           "time_s": el}
+                    if "balance" in ms:
+                        rec["balance"] = float(ms["balance"][j])
+                    if i in eval_steps:   # schedule guarantees i == e - 1
+                        rec.update(self.eval_fn(self.state, i))
+                    self.history.append(rec)
+                    if self.log is not None:
+                        self.log(json.dumps(rec))
+        finally:
+            if isinstance(it, Prefetcher):
+                it.close()
+        if self.ckpt_dir:
+            save_checkpoint(self.ckpt_dir, tc.steps, self.state,
+                            {"arch": self.cfg.arch_id,
+                             **(self.ckpt_meta or {})})
+        return self.state, self.history

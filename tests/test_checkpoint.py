@@ -96,3 +96,37 @@ def test_resume_continues_identically(tmp_path):
     for a, b in zip(jax.tree.leaves(s_straight), jax.tree.leaves(s_resumed)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", ["traced_cond", "host_cond"])
+def test_trainer_resume_continues_identically(tmp_path, strategy):
+    """The Trainer's --resume contract (DESIGN.md §8): 6 straight scan-fused
+    steps == 4 steps -> checkpoint -> restore -> 2 more, BITWISE. Both the
+    data stream (batch_fn keyed by absolute step) and the Gating-Dropout
+    consensus stream ((seed, step) fold) must continue where the
+    checkpointed run left off — even though the resumed run chunks the
+    remaining steps differently."""
+    from repro.training import Trainer
+    cfg = _tiny_cfg(moe=MoEConfig(
+        n_experts=4, top_k=1, d_ff_expert=64, jitter_eps=0.0,
+        gating_dropout=GatingDropoutConfig(mode="gate_drop", rate=0.5)))
+    task = SyntheticLM(LMTaskConfig(vocab=cfg.vocab, seq_len=16))
+    batch_fn = lambda i: task.sample_batch(i, 4)   # noqa: E731
+
+    def make(steps, ckpt=None):
+        tc = TrainConfig(lr=1e-3, warmup_steps=2, seed=3, steps=steps)
+        return Trainer(cfg, tc, batch_fn, chunk=3, strategy=strategy,
+                       ckpt_dir=ckpt, log=None)
+
+    s_straight, _ = make(6).run()
+
+    make(4, ckpt=str(tmp_path)).run()              # saves at step 4
+    tr = make(6, ckpt=str(tmp_path))
+    assert tr.restore() == 4
+    assert int(tr.state["step"]) == 4
+    s_resumed, _ = tr.run()
+
+    gd = cfg.moe.gating_dropout
+    assert any(drop_decision_host(gd, 3, i) for i in range(6))
+    for a, b in zip(jax.tree.leaves(s_straight), jax.tree.leaves(s_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -31,6 +31,21 @@ def test_decision_rate_matches_p():
     assert abs(np.mean(draws) - 0.3) < 0.04
 
 
+def test_batched_decisions_equal_per_step():
+    """The one-dispatch batched draw (Trainer host_cond path) is bitwise
+    the per-step draws, for any span and seed; disabled configs give all
+    False without dispatching."""
+    from repro.core.gating_dropout import drop_decisions_host
+    gd = GatingDropoutConfig(mode="gate_drop", rate=0.3)
+    for seed, lo, hi in [(0, 0, 64), (7, 5, 6), (3, 100, 131)]:
+        batched = drop_decisions_host(gd, seed, lo, hi)
+        per_step = [drop_decision_host(gd, seed, i) for i in range(lo, hi)]
+        np.testing.assert_array_equal(batched, per_step)
+    off = GatingDropoutConfig(mode="off", rate=0.0)
+    assert not drop_decisions_host(off, 0, 0, 16).any()
+    assert drop_decisions_host(gd, 0, 4, 4).shape == (0,)
+
+
 def test_decision_off_at_inference():
     gd = GatingDropoutConfig(mode="gate_drop", rate=1.0)
     assert not bool(drop_decision(gd, 0, 5, is_training=False))

@@ -1,0 +1,59 @@
+"""Launcher smoke coverage: `python -m repro.launch.train` end to end in a
+subprocess (the exact user entrypoint — argparse, Trainer wiring, BLEU
+eval, --json-out), asserting the JSON history is well-formed."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_module(args, timeout=540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"launcher failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+def test_train_cli_smoke_json_history(tmp_path):
+    """8 reduced steps with periodic BLEU eval; --batch/--seq shrunk so the
+    chunk executables compile quickly. Asserts the --json-out schema the
+    benchmarks consume."""
+    out_json = str(tmp_path / "hist.json")
+    # traced_cond -> one executable per chunk LENGTH (host_cond would also
+    # specialize on the decision, doubling compile work — covered by
+    # tests/test_trainer.py at tiny scale instead)
+    stdout = run_module(["--reduced", "--steps", "8", "--eval-every", "4",
+                         "--json-out", out_json,
+                         "--batch", "4", "--seq", "16", "--chunk", "4",
+                         "--strategy", "traced_cond",
+                         "--microbatches", "2", "--schedule", "cosine"])
+    with open(out_json) as f:
+        data = json.load(f)
+    assert data["arch"]
+    assert data["gd"] is not None          # zcode-m3 carries a gd config
+    hist = data["history"]
+    assert hist, stdout
+    steps = [r["step"] for r in hist]
+    assert steps == sorted(steps)
+    assert steps[-1] == 7
+    for rec in hist:
+        for k in ("loss", "acc", "lr", "tok_s", "time_s"):
+            assert k in rec and np.isfinite(rec[k]), (rec, k)
+        assert rec["tok_s"] > 0
+    # --schedule cosine + warmup: lr must actually move between records
+    lrs = {r["lr"] for r in hist}
+    assert len(lrs) > 1, hist
+    # eval steps (0, 4, last) carry a BLEU value
+    bleu_steps = {r["step"] for r in hist if "bleu" in r}
+    assert {0, 4, 7} <= bleu_steps, hist
+    assert all(np.isfinite(r["bleu"]) for r in hist if "bleu" in r)
+    # stdout mirrors the history as JSON lines
+    assert any('"step": 7' in l for l in stdout.splitlines())
