@@ -55,6 +55,11 @@ def bench_table7(fast):
     return main(fast)
 
 
+def bench_table8(fast):
+    from benchmarks.table8_serving import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -96,6 +101,7 @@ BENCHES = {
     "table5": bench_table5,
     "table6": bench_table6,
     "table7": bench_table7,
+    "table8": bench_table8,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

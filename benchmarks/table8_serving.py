@@ -1,0 +1,214 @@
+"""Table 8 (beyond paper): continuous vs static batching on a mixed trace.
+
+The serving claim of the continuous-batching refactor (DESIGN.md §9):
+on a trace of requests with mixed prompt lengths and mixed per-request
+token budgets, the slot-pool scheduler sustains >= 1.3x the useful-token
+throughput of static batching, because a static batch runs until its
+SLOWEST member finishes while the scheduler refills retired slots
+mid-flight.
+
+Measured per arch (reduced configs; MoE archs get non-binding eval
+capacity so expert truncation cannot couple requests):
+
+  * static     -- the pre-refactor shape: requests grouped FIFO into
+                  same-length batches of `slots`, each batch run through
+                  the ONE-SHOT engine for the full gen.max_new steps (the
+                  one-shot loop cannot see per-request budgets — that is
+                  exactly what the refactor adds).
+  * continuous -- `repro.serve.ContinuousScheduler` over the same trace.
+  * continuous+local -- MoE archs only: same, with `local_routing=True`
+                  (Gate-Drop local path at decode; token parity with the
+                  routed column asserted at ep=1, where the local group
+                  is all experts).
+
+Per-request TOKEN PARITY of the continuous path against one-shot
+``generate`` (B=1, pool cache length) is asserted for every request;
+both paths are fully warmed before timing. Results land in
+``benchmarks/artifacts/table8_serving.json`` (schema: benchmarks/
+README.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import ART, csv_row
+from repro.configs import get_config, reduced
+from repro.models import init_model
+from repro.serve import (ContinuousScheduler, GenerateConfig, Request,
+                         generate, static_batch_serve)
+
+ARCHS = ["yi-6b", "zcode-m3-base"]
+KEY = jax.random.PRNGKey(0)
+
+
+def _ample(cfg):
+    """Non-binding eval expert capacity: required for request-placement-
+    invariant MoE decoding (DESIGN.md §9)."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, eval_capacity_factor=float(cfg.moe.n_experts)))
+
+
+def _bench_cfg(arch: str):
+    """Narrowed reduced config (table7 precedent): wide enough that the
+    device decode step dominates per-tick host dispatch — the regime an
+    accelerator is always in — so the measured gap is batching policy,
+    not Python overhead."""
+    return _ample(reduced(get_config(arch), d_model=512, n_layers=4,
+                          d_ff=1024, head_dim=128))
+
+
+def _extras(cfg, key):
+    out = {}
+    if cfg.encdec is not None:
+        if cfg.encdec.frontend == "stub":
+            out["frames"] = np.asarray(jax.random.normal(
+                key, (cfg.encdec.encoder_seq, cfg.d_model)), np.float32)
+        else:
+            out["enc_tokens"] = np.asarray(jax.random.randint(
+                key, (32,), 3, cfg.vocab), np.int32)
+    return out
+
+
+def make_trace(cfg, key, n: int, lens: List[int], max_new: int
+               ) -> List[Request]:
+    """Backlogged trace (all arrive at t=0): prompt lengths cycle through
+    ``lens``; token budgets are LONG-TAILED (75% short 2-8, 25% near
+    max_new) — the real serving distribution where one long response pins
+    an entire static batch to its finish line."""
+    rs = np.random.RandomState(7)
+    reqs = []
+    for i in range(n):
+        plen = lens[i % len(lens)]
+        if rs.rand() < 0.75:
+            budget = int(rs.randint(2, 9))
+        else:
+            budget = int(rs.randint(max(2, max_new - 8), max_new + 1))
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 3, cfg.vocab), np.int32)
+        reqs.append(Request(
+            rid=i, tokens=toks, max_new=budget, arrival=0.0,
+            extras=_extras(cfg, jax.random.fold_in(key, 1000 + i))))
+    return reqs
+
+
+def _run_continuous(params, cfg, gen, reqs, slots, buckets):
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=slots,
+                                prefill_buckets=buckets)
+    t0 = time.perf_counter()
+    results = sched.run(reqs)
+    wall = time.perf_counter() - t0
+    toks = {r.rid: r.tokens for r in results}
+    n_tok = int(sum(r.length for r in results))
+    return toks, n_tok, wall, sched
+
+
+def _best_of(fn, iters: int):
+    """(result, min wall): noise-robust timing — each iter replays the
+    whole warmed trace, the minimum wall is the least-interference run."""
+    best = None
+    out = None
+    for _ in range(iters):
+        r, wall = fn()
+        if best is None or wall < best:
+            best, out = wall, r
+    return out, best
+
+
+def bench_arch(arch: str, *, n_req: int, slots: int, max_new: int,
+               lens: List[int], buckets, iters: int = 5) -> Dict:
+    cfg = _bench_cfg(arch)
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=max_new, eos_id=-1)
+    reqs = make_trace(cfg, jax.random.fold_in(KEY, 2), n_req, lens, max_new)
+
+    # warmup (compiles) then measure best-of-iters full-trace replays
+    _run_continuous(params, cfg, gen, reqs, slots, buckets)
+    (c_toks, c_n, sched), c_wall = _best_of(
+        lambda: ((lambda t, n, w, s: ((t, n, s), w))(
+            *_run_continuous(params, cfg, gen, reqs, slots, buckets))),
+        iters)
+    static_batch_serve(params, cfg, gen, reqs, batch_size=slots,
+                       max_seq=sched.max_seq)
+    s_toks, s_wall = _best_of(
+        lambda: static_batch_serve(params, cfg, gen, reqs,
+                                   batch_size=slots,
+                                   max_seq=sched.max_seq), iters)
+
+    # parity: every request == one-shot generate (B=1, pool cache length)
+    gref = dataclasses.replace(gen, max_seq=sched.max_seq)
+    parity = True
+    for r in reqs:
+        batch = {"tokens": r.tokens[None]}
+        for k, v in r.extras.items():
+            batch[k] = v[None]
+        one = generate(params, batch, cfg, gref)
+        n = min(int(one.lengths[0]), r.max_new)
+        ref = np.asarray(one.tokens)[0, :n]
+        parity &= bool(np.array_equal(c_toks[r.rid], ref))
+        parity &= bool(np.array_equal(s_toks[r.rid], ref))
+    assert parity, f"{arch}: continuous/static diverged from one-shot"
+
+    useful = c_n                   # same trace -> same useful tokens
+    rec = {
+        "continuous": {"wall_s": c_wall, "tok_s": useful / c_wall,
+                       "scheduler": dict(sched.stats)},
+        "static": {"wall_s": s_wall, "tok_s": useful / s_wall},
+        "useful_tokens": useful,
+        "speedup": s_wall / c_wall,
+        "parity": parity,
+    }
+
+    if cfg.moe is not None:
+        gloc = dataclasses.replace(gen, local_routing=True)
+        _run_continuous(params, cfg, gloc, reqs, slots, buckets)
+        l_toks, _, l_wall, _ = _run_continuous(params, cfg, gloc, reqs,
+                                               slots, buckets)
+        # ep=1: the local group is all experts -> identical tokens
+        local_parity = all(np.array_equal(l_toks[r.rid], c_toks[r.rid])
+                           for r in reqs)
+        rec["continuous_local_routing"] = {
+            "wall_s": l_wall, "tok_s": useful / l_wall,
+            "tokens_equal_routed": bool(local_parity),
+        }
+
+    csv_row(f"table8/{arch}", c_wall * 1e6,
+            f"continuous_tok_s={rec['continuous']['tok_s']:.0f};"
+            f"static_tok_s={rec['static']['tok_s']:.0f};"
+            f"speedup={rec['speedup']:.2f}x;parity={parity}")
+    return rec
+
+
+def main(fast: bool = True):
+    n_req, slots = (32, 8) if fast else (64, 8)
+    max_new = 24 if fast else 48
+    lens = [5, 8, 11, 16]
+    buckets = (8, 16)
+    out = {"shape": {"n_requests": n_req, "slots": slots,
+                     "max_new": max_new, "prompt_lens": lens,
+                     "buckets": list(buckets)},
+           "archs": {}}
+    for arch in ARCHS:
+        out["archs"][arch] = bench_arch(arch, n_req=n_req, slots=slots,
+                                        max_new=max_new, lens=lens,
+                                        buckets=buckets)
+    speedups = [a["speedup"] for a in out["archs"].values()]
+    out["min_speedup"] = min(speedups)
+    assert out["min_speedup"] >= 1.3, \
+        f"continuous batching under 1.3x: {speedups}"
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table8_serving.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(fast=False), indent=1))

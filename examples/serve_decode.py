@@ -1,12 +1,19 @@
-"""Serving example: batched prefill + compiled decode for any assigned arch.
+"""Serving example: compiled one-shot decode AND continuous batching.
 
   PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
   PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v3-671b \
       --batch 4 --prompt-len 32   # reduced config, MLA absorbed decode
+  PYTHONPATH=src python examples/serve_decode.py --arch yi-6b \
+      --continuous                # slot-pool scheduler over a mini trace
 
 Demonstrates the per-family cache machinery (full KV, sliding-window ring
 buffer, MLA compressed latents, SSM constant-size state) driven by the
-one compiled generation loop in ``repro.serve`` (DESIGN.md §7).
+one compiled generation loop in ``repro.serve`` (DESIGN.md §7), and the
+continuous-batching scheduler over the same engine's slot-pool
+primitives (DESIGN.md §9): mixed-length prompts with per-request token
+budgets stream through a fixed pool of cache slots, freed slots are
+re-prefilled mid-flight, and every request's tokens equal its one-shot
+decode.
 """
 import argparse
 import time
@@ -16,7 +23,8 @@ import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.models import init_cache, init_model
-from repro.serve import GenerateConfig, make_generate_fn
+from repro.serve import (ContinuousScheduler, GenerateConfig, Request,
+                         make_generate_fn)
 
 
 def describe_cache(caches):
@@ -26,17 +34,7 @@ def describe_cache(caches):
     return total
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mamba2-1.3b", choices=ASSIGNED_ARCHS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--max-new", type=int, default=24)
-    args = ap.parse_args()
-
-    cfg = reduced(get_config(args.arch))
-    key = jax.random.PRNGKey(0)
-    params = init_model(key, cfg)
+def one_shot(args, cfg, params, key):
     batch = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 3, cfg.vocab)}
     if cfg.vlm is not None:
@@ -66,6 +64,69 @@ def main():
     print(f"decode: {dt/args.max_new*1e3:.1f} ms/token, "
           f"{args.batch*args.max_new/dt:.0f} tok/s (single compiled loop)")
     print("first sequence:", np.asarray(res.tokens)[0].tolist())
+
+
+def _request_extras(cfg, key):
+    """Per-request conditioning inputs (no batch axis), per family."""
+    extras = {}
+    if cfg.vlm is not None:
+        extras["img_embeds"] = np.asarray(jax.random.normal(
+            key, (cfg.vlm.n_image_tokens, cfg.vlm.d_image)), np.float32)
+    if cfg.encdec is not None:
+        if cfg.encdec.frontend == "stub":
+            extras["frames"] = np.asarray(jax.random.normal(
+                key, (cfg.encdec.encoder_seq, cfg.d_model)), np.float32)
+        else:
+            extras["enc_tokens"] = np.asarray(jax.random.randint(
+                key, (32,), 3, cfg.vocab), np.int32)
+    return extras
+
+
+def continuous(args, cfg, params, key):
+    """Mini trace: 8 requests, mixed prompt lengths + budgets, 3 slots."""
+    gen = GenerateConfig(max_new=args.max_new, eos_id=-1)
+    reqs = []
+    for i, (plen, budget) in enumerate(
+            [(5, 6), (12, args.max_new), (8, 4), (15, 9),
+             (6, 3), (10, args.max_new), (7, 5), (9, 8)]):
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 3, cfg.vocab), np.int32)
+        reqs.append(Request(rid=i, tokens=toks, max_new=budget,
+                            extras=_request_extras(
+                                cfg, jax.random.fold_in(key, 100 + i)),
+                            arrival=i * 0.01))
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=3,
+                                prefill_buckets=(8, 16))
+    t0 = time.time()
+    results = sched.run(reqs)
+    wall = time.time() - t0
+    n_tok = sum(r.length for r in results)
+    print(f"{cfg.arch_id}: served {len(results)} requests "
+          f"({n_tok} tokens) through 3 slots in {wall:.2f} s")
+    print(f"scheduler: {sched.stats}")
+    for r in results[:3]:
+        print(f"  request {r.rid}: {r.length} tokens, "
+              f"ttft {r.ttft*1e3:.0f} ms -> {r.tokens.tolist()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b", choices=ASSIGNED_ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--continuous", action="store_true",
+                    help="drive the continuous-batching scheduler over a "
+                         "mini mixed-length trace (DESIGN.md §9)")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    key = jax.random.PRNGKey(0)
+    params = init_model(jax.random.fold_in(key, 0), cfg)
+    if args.continuous:
+        continuous(args, cfg, params, jax.random.fold_in(key, 1))
+    else:
+        one_shot(args, cfg, params, jax.random.fold_in(key, 1))
 
 
 if __name__ == "__main__":

@@ -95,6 +95,7 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
                    *, rng: Optional[jax.Array] = None, decision=None,
                    is_training: bool = True,
                    token_ids: Optional[jax.Array] = None,
+                   token_valid: Optional[jax.Array] = None,
                    interpret: Optional[bool] = None
                    ) -> Tuple[jax.Array, Dict]:
     """Kernel pipeline: route -> routing_tables (once) -> dispatch gather
@@ -114,7 +115,8 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
         with K.use_kernels(True), pin:
             return sharded_backend(params, x, cfg, ctx, rng=rng,
                                    decision=decision, is_training=is_training,
-                                   token_ids=token_ids)
+                                   token_ids=token_ids,
+                                   token_valid=token_valid)
 
     moe = cfg.moe
     shape = x.shape
@@ -122,6 +124,8 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
     T = xf.shape[0]
     E = moe.n_experts
     tok = None if token_ids is None else token_ids.reshape(-1)
+    tv = (None if token_valid is None
+          else jnp.broadcast_to(token_valid.reshape(-1, 1), (T, moe.top_k)))
     wr = params["router"]["w"]
     experts = params["experts"]
     cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
@@ -142,7 +146,7 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
     def routed():
         rr = R.route(wr, xf, moe, rng=_shard_rng(rng, 0),
                      is_training=is_training, token_ids=tok)
-        info = R.dispatch_info(rr, E, cap)
+        info = R.dispatch_info(rr, E, cap, valid=tv)
         return _pipeline(info), _routed_aux(rr, info, moe)
 
     def local():
@@ -152,6 +156,8 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
                      is_training=is_training, token_ids=tok,
                      expert_lo=0, n_local=E)
         rr, valid = _local_adjust(rr, moe, 0, E)
+        if tv is not None:
+            valid = valid & tv
         info = R.dispatch_info(rr, E, cap, valid=valid)
         return _pipeline(info), _local_aux(rr, info, moe, T)
 

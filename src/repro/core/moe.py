@@ -197,18 +197,28 @@ def _local_aux(rr, info, moe: MoEConfig, T: int) -> Dict[str, jax.Array]:
             "load": load, "dropped_frac": 1.0 - info.keep.mean()}
 
 
+def _token_valid_tk(token_valid, k: int):
+    """(T,) bool token validity -> (T, k) dispatch validity (or None)."""
+    if token_valid is None:
+        return None
+    return jnp.broadcast_to(token_valid.reshape(-1, 1),
+                            (token_valid.size, k))
+
+
 def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
                   is_training, token_ids, my_shard, ep: int, tp_axis,
-                  a2a_axis):
+                  a2a_axis, token_valid=None):
     """Normal MoE step on one shard: route -> dispatch -> (a2a) -> FFN ->
-    (a2a) -> combine."""
+    (a2a) -> combine. ``token_valid`` masks tokens (retired serving slots)
+    out of capacity competition — they neither dispatch nor combine."""
     T = xf.shape[0]
     E = moe.n_experts
     cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
     cap = min(R.capacity(T, E, moe.top_k, cf), T)
     rr = R.route(wr, xf, moe, rng=_shard_rng(rng, my_shard),
                  is_training=is_training, token_ids=token_ids)
-    info = R.dispatch_info(rr, E, cap)
+    info = R.dispatch_info(rr, E, cap,
+                           valid=_token_valid_tk(token_valid, moe.top_k))
     from repro.kernels import ops as K
     if K.KERNELS_ENABLED:
         # routing tables built once; the combine gather reuses them
@@ -230,7 +240,8 @@ def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
 
 
 def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
-                 is_training, token_ids, my_shard, ep: int, tp_axis):
+                 is_training, token_ids, my_shard, ep: int, tp_axis,
+                 token_valid=None):
     """Gate-Drop local step: tokens stay on this shard, routed among the
     local expert group only. No collective over the data axis."""
     T = xf.shape[0]
@@ -241,6 +252,8 @@ def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
                  is_training=is_training, token_ids=token_ids,
                  expert_lo=lo, n_local=e_loc)
     rr, valid = _local_adjust(rr, moe, lo, e_loc)
+    if token_valid is not None:
+        valid = valid & token_valid.reshape(-1, 1)
     rr_local = rr._replace(topk_idx=rr.topk_idx - lo)
     cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
     cap = min(R.capacity(T, e_loc, moe.top_k, cf), T)
@@ -263,7 +276,9 @@ def _zero_aux(E: int):
 def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
                ep: int = 1, rng: Optional[jax.Array] = None,
                decision: Decision = None, is_training: bool = True,
-               token_ids: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+               token_ids: Optional[jax.Array] = None,
+               token_valid: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Dict]:
     """Reference MoE with `ep` virtual machines. x: (B, L, d) or (T, d)."""
     moe = cfg.moe
     shape = x.shape
@@ -272,6 +287,7 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
     assert T % ep == 0 and moe.n_experts % ep == 0
     xs = xf.reshape(ep, T // ep, shape[-1])
     tok = None if token_ids is None else token_ids.reshape(ep, T // ep)
+    tv = None if token_valid is None else token_valid.reshape(ep, T // ep)
     wr = params["router"]["w"]
     experts = params["experts"]
     E = moe.n_experts
@@ -281,15 +297,17 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
         cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
         cap = min(R.capacity(Tl, E, moe.top_k, cf), Tl)
 
-        def shard_dispatch(my, xl, tl):
+        def shard_dispatch(my, xl, tl, tvl):
             rr = R.route(wr, xl, moe, rng=_shard_rng(rng, my),
                          is_training=is_training, token_ids=tl)
-            info = R.dispatch_info(rr, E, cap)
+            info = R.dispatch_info(rr, E, cap,
+                                   valid=_token_valid_tk(tvl, moe.top_k))
             return R.dispatch(xl, info, E, cap), info, rr
 
         bufs, infos, rrs = jax.vmap(
-            shard_dispatch, in_axes=(0, 0, 0 if tok is not None else None))(
-            jnp.arange(ep), xs, tok)
+            shard_dispatch, in_axes=(0, 0, 0 if tok is not None else None,
+                                     0 if tv is not None else None))(
+            jnp.arange(ep), xs, tok, tv)
         # virtual all-to-all: (ep, E, cap, d) -> (E, ep*cap, d)
         gbuf = jnp.transpose(bufs, (1, 0, 2, 3)).reshape(E, ep * cap, -1)
         gout = _expert_ffn(experts, gbuf, cfg, None)
@@ -308,14 +326,16 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
     def local():
         e_loc = E // ep
 
-        def shard_local(my, xl, tl):
+        def shard_local(my, xl, tl, tvl):
             ex_loc = jax.tree.map(lambda w: jax.lax.dynamic_slice_in_dim(
                 w, my * e_loc, e_loc, axis=0), experts)
             return _local_shard(wr, ex_loc, xl, moe, cfg, rng, is_training,
-                                tl, my, ep, None)
+                                tl, my, ep, None, token_valid=tvl)
 
-        ys, auxs = jax.vmap(shard_local, in_axes=(0, 0, 0 if tok is not None else None))(
-            jnp.arange(ep), xs, tok)
+        ys, auxs = jax.vmap(
+            shard_local, in_axes=(0, 0, 0 if tok is not None else None,
+                                  0 if tv is not None else None))(
+            jnp.arange(ep), xs, tok, tv)
         return ys.reshape(T, -1), jax.tree.map(lambda a: a.mean(0), auxs)
 
     def expert_drop():
@@ -345,7 +365,9 @@ def _select_branch(moe: MoEConfig, decision: Decision, routed, local,
 def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
                 ctx: ParallelContext, *, rng: Optional[jax.Array] = None,
                 decision: Decision = None, is_training: bool = True,
-                token_ids: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+                token_ids: Optional[jax.Array] = None,
+                token_valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict]:
     """MoE with real all-to-all over ctx.ep_axis. x: (B, L, d)."""
     moe = cfg.moe
     mesh = ctx.mesh
@@ -381,10 +403,11 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
         else None
     traced = static_dec is None and decision is not None
 
-    def body(wr, experts, x_loc, rng_, dec, tok_loc):
+    def body(wr, experts, x_loc, rng_, dec, tok_loc, tv_loc):
         B_loc, L, d = x_loc.shape
         xf = x_loc.reshape(B_loc * L, d)
         tf = None if tok_loc is None else tok_loc.reshape(-1)
+        tvf = None if tv_loc is None else tv_loc.reshape(-1)
         if ep_on_model:
             my = (jax.lax.axis_index(ctx.ep_axis) * ctx.tp
                   + jax.lax.axis_index(ctx.tp_axis))
@@ -393,11 +416,12 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
 
         def routed():
             return _routed_shard(wr, experts, xf, moe, cfg, rng_, is_training,
-                                 tf, my, ep, tp_axis, a2a_axis)
+                                 tf, my, ep, tp_axis, a2a_axis,
+                                 token_valid=tvf)
 
         def local():
             return _local_shard(wr, experts, xf, moe, cfg, rng_, is_training,
-                                tf, my, ep, tp_axis)
+                                tf, my, ep, tp_axis, token_valid=tvf)
 
         def expert_drop():
             return jnp.zeros_like(xf), _zero_aux(E)
@@ -420,6 +444,9 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
     if token_ids is not None:
         in_specs.append(tok_spec)
         args.append(token_ids)
+    if token_valid is not None:
+        in_specs.append(tok_spec)
+        args.append(token_valid)
 
     def wrapper(*ops):
         wr, experts, x_loc, rng_ = ops[:4]
@@ -428,8 +455,11 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
             dec = ops[i]; i += 1
         else:
             dec = static_dec
-        tok_loc = ops[i] if token_ids is not None else None
-        return body(wr, experts, x_loc, rng_, dec, tok_loc)
+        tok_loc = None
+        if token_ids is not None:
+            tok_loc = ops[i]; i += 1
+        tv_loc = ops[i] if token_valid is not None else None
+        return body(wr, experts, x_loc, rng_, dec, tok_loc, tv_loc)
 
     fn = _shard_map(wrapper, mesh, tuple(in_specs), (x_spec, P()))
     return fn(*args)
@@ -449,12 +479,18 @@ def moe_apply(params: Params, x: jax.Array, cfg: ModelConfig,
               ctx: Optional[ParallelContext] = None, *,
               rng: Optional[jax.Array] = None, decision: Decision = None,
               is_training: bool = True,
-              token_ids: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+              token_ids: Optional[jax.Array] = None,
+              token_valid: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Dict]:
     """Entry point used by the models. The execution path is chosen by
     ``cfg.moe.backend`` through the backend registry (DESIGN.md §6);
     the default "auto" keeps the historical behavior — sharded when a real
-    mesh is active, oracle otherwise."""
+    mesh is active, oracle otherwise. ``token_valid`` (same leading shape
+    as ``x``'s token dims) marks tokens from retired/empty serving slots:
+    they are routed but never dispatched, so they cannot steal expert
+    capacity from live tokens (DESIGN.md §9)."""
     from repro.core import backend as B
     fn = B.get_backend(B.resolve_backend(cfg.moe, ctx))
     return fn(params, x, cfg, ctx, rng=rng, decision=decision,
-              is_training=is_training, token_ids=token_ids)
+              is_training=is_training, token_ids=token_ids,
+              token_valid=token_valid)

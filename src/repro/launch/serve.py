@@ -1,4 +1,6 @@
-"""Batched serving CLI for any arch, via the compiled decoding engine.
+"""Serving CLI: one-shot batched decode OR a continuous-batching loop.
+
+One-shot (the compiled engine, DESIGN.md §7):
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --batch 8 --prompt-len 64 --max-new 32
@@ -7,15 +9,28 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --temperature 0.8 --top-k 40  # sampling
 
-Generation runs through ``repro.serve`` (DESIGN.md §7): prefill + the
-whole token loop in ONE jitted executable — no per-token Python dispatch.
-MoE archs honour ``--backend`` (DESIGN.md §6): oracle / sharded / pallas
-execution of the expert layers during prefill+decode.
+Continuous batching (slot pool + scheduler, DESIGN.md §9): ``--trace N``
+synthesizes N requests with Poisson arrivals (``--rate`` req/s), mixed
+prompt lengths and per-request token budgets, serves them through
+``repro.serve.ContinuousScheduler``, and reports TTFT / per-token
+latency / throughput percentiles (``--json-out`` for machines):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+      --trace 32 --rate 50 --slots 8 --json-out serve.json
+
+MoE archs honour ``--backend`` (DESIGN.md §6) and ``--local-routing``
+(Gate-Drop local path at decode: no all-to-all in the sharded decode
+executable, DESIGN.md §9).
+
+PRNG discipline: parameter init, prompt synthesis, and sampling each fold
+a DISTINCT stream off ``--seed`` (folds 0/1/2) — reusing one key made
+"random" prompts functions of the weights.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -23,7 +38,93 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import init_model
-from repro.serve import GenerateConfig, make_generate_fn
+from repro.serve import (ContinuousScheduler, GenerateConfig, Request,
+                         make_generate_fn)
+
+
+def synth_batch(cfg, key, batch: int, prompt_len: int):
+    """Conditioning inputs for a batch of synthetic prompts; each field
+    draws from its own fold of ``key``."""
+    out = {"tokens": jax.random.randint(
+        jax.random.fold_in(key, 0), (batch, prompt_len), 3, cfg.vocab)}
+    if cfg.vlm is not None:
+        out["img_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, cfg.vlm.n_image_tokens, cfg.vlm.d_image))
+    if cfg.encdec is not None:
+        if cfg.encdec.frontend == "stub":
+            out["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 2),
+                (batch, cfg.encdec.encoder_seq, cfg.d_model))
+        else:
+            out["enc_tokens"] = jax.random.randint(
+                jax.random.fold_in(key, 3), (batch, 32), 3, cfg.vocab)
+    return out
+
+
+def synth_trace(cfg, key, n: int, rate: float, buckets, max_new: int):
+    """Synthetic request trace: Poisson arrivals (exponential gaps at
+    ``rate`` req/s), prompt lengths uniform over [2, max bucket], token
+    budgets uniform over [2, max_new]."""
+    rs = np.random.RandomState(np.asarray(
+        jax.random.key_data(key) if hasattr(jax.random, "key_data")
+        else key)[-1] & 0x7FFFFFFF)
+    gaps = rs.exponential(1.0 / rate, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    reqs = []
+    for i in range(n):
+        plen = int(rs.randint(2, buckets[-1] + 1))
+        budget = int(rs.randint(2, max_new + 1))
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 10 + i), (plen,), 3, cfg.vocab),
+            np.int32)
+        extras = {}
+        row = synth_batch(cfg, jax.random.fold_in(key, 1000 + i), 1, 1)
+        for k, v in row.items():
+            if k != "tokens":
+                extras[k] = np.asarray(v[0])
+        reqs.append(Request(rid=i, tokens=toks, extras=extras,
+                            max_new=budget, arrival=float(arrivals[i])))
+    return reqs
+
+
+def _pcts(xs):
+    xs = np.asarray(xs, np.float64)
+    return {p: float(np.percentile(xs, p)) for p in (50, 90, 99)}
+
+
+def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    # trace synthesis draws from the PROMPT stream; key_sample feeds only
+    # the scheduler's per-request sampling folds — distinct parent folds,
+    # so prompt and sampling keys can never collide
+    reqs = synth_trace(cfg, key_prompts, args.trace,
+                       args.rate, buckets, gen.max_new)
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=args.slots,
+                                prefill_buckets=buckets,
+                                admit_width=args.admit_width,
+                                rng=key_sample)
+    t0 = time.perf_counter()
+    results = sched.run(reqs)
+    wall = time.perf_counter() - t0
+    n_tok = int(sum(r.length for r in results))
+    rec = {
+        "mode": "continuous",
+        "arch": cfg.arch_id,
+        "n_requests": len(results),
+        "n_tokens": n_tok,
+        "wall_s": wall,
+        "tok_s": n_tok / wall,
+        "req_s": len(results) / wall,
+        "ttft_s": _pcts([r.ttft for r in results]),
+        "per_token_latency_s": _pcts([r.per_token_latency
+                                      for r in results]),
+        "scheduler": dict(sched.stats),
+        "slots": args.slots,
+        "buckets": list(buckets),
+        "local_routing": gen.local_routing,
+    }
+    return rec
 
 
 def main():
@@ -40,12 +141,31 @@ def main():
                     help="sampling pool size (0 = full vocab)")
     ap.add_argument("--beam", type=int, default=1,
                     help=">1 = beam search (overrides sampling)")
-    ap.add_argument("--eos", type=int, default=-1,
+    ap.add_argument("--eos", type=int, default=GenerateConfig.eos_id,
                     help="EOS token id for early exit (-1 = generate "
-                         "max-new tokens unconditionally)")
+                         "max-new tokens unconditionally); default matches "
+                         "GenerateConfig.eos_id")
     ap.add_argument("--backend", default=None,
                     choices=[None, "auto", "oracle", "sharded", "pallas"],
                     help="MoE execution backend (DESIGN.md §6)")
+    ap.add_argument("--local-routing", action="store_true",
+                    help="Gate-Drop local routing at decode: MoE tokens "
+                         "stay in the local expert group, no all-to-all "
+                         "in the decode executable (DESIGN.md §9)")
+    # continuous batching
+    ap.add_argument("--trace", type=int, default=0,
+                    help="N>0: serve N synthetic Poisson-arrival requests "
+                         "through the continuous-batching scheduler")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="trace arrival rate, requests/s")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slot-pool size")
+    ap.add_argument("--admit-width", type=int, default=None,
+                    help="admission group width (default min(4, slots))")
+    ap.add_argument("--buckets", default="8,16,32,64",
+                    help="prefill length buckets, comma-separated")
+    ap.add_argument("--json-out", default=None,
+                    help="write metrics JSON here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,30 +174,40 @@ def main():
     if args.backend and cfg.moe is not None:
         cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
             cfg.moe, backend=args.backend))
+    # distinct PRNG streams: params / prompts / sampling
     key = jax.random.PRNGKey(args.seed)
-    params = init_model(key, cfg)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 3, cfg.vocab)}
-    if cfg.vlm is not None:
-        batch["img_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.vlm.n_image_tokens, cfg.vlm.d_image))
-    if cfg.encdec is not None:
-        if cfg.encdec.frontend == "stub":
-            batch["frames"] = jax.random.normal(
-                key, (args.batch, cfg.encdec.encoder_seq, cfg.d_model))
-        else:
-            batch["enc_tokens"] = jax.random.randint(
-                key, (args.batch, 32), 3, cfg.vocab)
+    key_params = jax.random.fold_in(key, 0)
+    key_prompts = jax.random.fold_in(key, 1)
+    key_sample = jax.random.fold_in(key, 2)
+    params = init_model(key_params, cfg)
 
     gen = GenerateConfig(max_new=args.max_new, temperature=args.temperature,
                          top_k=args.top_k, beam_width=args.beam,
-                         eos_id=args.eos)
+                         eos_id=args.eos, local_routing=args.local_routing)
+
+    if args.trace > 0:
+        rec = run_trace(args, cfg, params, gen, key_prompts, key_sample)
+        print(f"arch={rec['arch']} served {rec['n_requests']} requests, "
+              f"{rec['n_tokens']} tokens in {rec['wall_s']:.2f} s "
+              f"({rec['tok_s']:.0f} tok/s)")
+        print(f"TTFT p50/p90/p99: "
+              + "/".join(f"{rec['ttft_s'][p]*1e3:.1f}" for p in (50, 90, 99))
+              + " ms; per-token latency p50/p90/p99: "
+              + "/".join(f"{rec['per_token_latency_s'][p]*1e3:.2f}"
+                         for p in (50, 90, 99)) + " ms")
+        print("scheduler:", rec["scheduler"])
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(rec, f, indent=1)
+        return
+
+    batch = synth_batch(cfg, key_prompts, args.batch, args.prompt_len)
     fn = make_generate_fn(cfg, gen)
     t0 = time.time()
-    res = jax.block_until_ready(fn(params, batch, key))   # compile + run
+    res = jax.block_until_ready(fn(params, batch, key_sample))  # compile+run
     t_compile = time.time() - t0
     t0 = time.time()
-    res = jax.block_until_ready(fn(params, batch, key))
+    res = jax.block_until_ready(fn(params, batch, key_sample))
     dt = time.time() - t0
     n_tok = int(np.asarray(res.lengths).sum())
     print(f"arch={cfg.arch_id} batch={args.batch} prompt={args.prompt_len} "
@@ -86,6 +216,12 @@ def main():
           f"({dt/max(int(res.steps), 1)*1e3:.2f} ms/step, "
           f"{n_tok/dt:.0f} tok/s)")
     print("sample:", np.asarray(res.tokens)[0][:16].tolist())
+    if args.json_out:
+        rec = {"mode": "oneshot", "arch": cfg.arch_id,
+               "n_tokens": n_tok, "wall_s": dt, "tok_s": n_tok / dt,
+               "compile_s": t_compile}
+        with open(args.json_out, "w") as f:
+            json.dump(rec, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -155,34 +155,61 @@ def decode_self_attention(p: Params, x: jax.Array, cache: Params,
                           window: int = 0, use_rope: bool = True
                           ) -> Tuple[jax.Array, Params]:
     """One-token decode. x: (B, 1, d); ``index`` = absolute position of the
-    new token. Ring-buffer cache when `window`>0 (cache length == window),
-    else full cache written at `index`."""
+    new token — a scalar (all rows at the same position) or a (B,) vector
+    (slot-pool decode: every row at its own position). Ring-buffer cache
+    when `window`>0 (cache length == window), else full cache written at
+    `index`. The per-row path requires the ring ``pos`` leaf batched to
+    (B, window) (``repro.serve.engine.init_slot_pool`` builds such caches);
+    masks are identical in value to the scalar path, so the two paths emit
+    bitwise-equal outputs when every row shares one position."""
+    index = jnp.asarray(index)
+    per_row = index.ndim == 1
+    b = x.shape[0]
     q, k, v = attn_qkv(p, x)
     if use_rope:
-        pos = jnp.asarray(index)[None]
+        pos = index[:, None] if per_row else index[None]
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
     k = k.astype(cache["k"].dtype)
     v = v.astype(cache["v"].dtype)
+    rows = jnp.arange(b)
     if window > 0 and cache["k"].shape[1] == window:
         slot = jnp.mod(index, window)
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(cache["pos"],
-                                            jnp.asarray(index)[None].astype(jnp.int32),
-                                            (slot,))
-        valid = (cpos >= 0) & (cpos > index - window) & (cpos <= index)
-        o = full_attention(q, ck, cv, causal=False, qpos=jnp.asarray(index)[None],
-                           kpos=jnp.maximum(cpos, 0), kv_valid=valid)
+        if per_row:
+            assert cache["pos"].ndim == 2, \
+                "per-row decode needs a slot-pool ring cache (batched pos)"
+            ck = cache["k"].at[rows, slot].set(k[:, 0])
+            cv = cache["v"].at[rows, slot].set(v[:, 0])
+            cpos = cache["pos"].at[rows, slot].set(index.astype(jnp.int32))
+            valid = ((cpos >= 0) & (cpos > index[:, None] - window)
+                     & (cpos <= index[:, None]))
+            o = full_attention(q, ck, cv, causal=False, kv_valid=valid)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cache["pos"], jnp.asarray(index)[None].astype(jnp.int32),
+                (slot,))
+            valid = (cpos >= 0) & (cpos > index - window) & (cpos <= index)
+            o = full_attention(q, ck, cv, causal=False,
+                               qpos=jnp.asarray(index)[None],
+                               kpos=jnp.maximum(cpos, 0), kv_valid=valid)
         new_cache = {"k": ck, "v": cv, "pos": cpos}
     else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, index, 0, 0))
-        s = ck.shape[1]
-        kpos = jnp.arange(s)
-        valid = kpos <= index
-        o = full_attention(q, ck, cv, causal=False, qpos=jnp.asarray(index)[None],
-                           kpos=kpos, kv_valid=valid)
+        s = cache["k"].shape[1]
+        if per_row:
+            ck = cache["k"].at[rows, index].set(k[:, 0])
+            cv = cache["v"].at[rows, index].set(v[:, 0])
+            valid = jnp.arange(s)[None, :] <= index[:, None]
+            o = full_attention(q, ck, cv, causal=False, kv_valid=valid)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, index, 0, 0))
+            kpos = jnp.arange(s)
+            valid = kpos <= index
+            o = full_attention(q, ck, cv, causal=False,
+                               qpos=jnp.asarray(index)[None],
+                               kpos=kpos, kv_valid=valid)
         new_cache = {"k": ck, "v": cv}
     return attn_out(p, o, x.dtype), new_cache
 

@@ -102,16 +102,31 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
 
 def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
                index: jax.Array) -> Tuple[jax.Array, Params]:
-    """Absorbed one-token decode against the compressed cache."""
+    """Absorbed one-token decode against the compressed cache. ``index`` is
+    a scalar, or a (B,) vector for slot-pool decode (per-row positions)."""
     m = cfg.mla
     dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
-    pos = jnp.asarray(index)[None]
+    index = jnp.asarray(index)
+    per_row = index.ndim == 1
+    pos = index[:, None] if per_row else index[None]
     q_nope, q_rope = _project_q(p, x, cfg, pos)            # (B,1,H,dn/(dr))
     c_new, kr_new = _compress_kv(p, x, cfg, pos)           # (B,1,c), (B,1,dr)
-    c_kv = jax.lax.dynamic_update_slice(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0))
+    smax = cache["c_kv"].shape[1]
+    if per_row:
+        rows = jnp.arange(x.shape[0])
+        c_kv = cache["c_kv"].at[rows, index].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, index].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+        valid = jnp.arange(smax)[None, :] <= index[:, None]       # (B, S)
+    else:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
+            (0, index, 0))
+        valid = jnp.broadcast_to(jnp.arange(smax) <= index,
+                                 (x.shape[0], smax))
     # absorb W_ukv(K) into the query
     w_k = p["w_ukv"][..., :dn]                             # (c, H, dn)
     w_v = p["w_ukv"][..., dn:]                             # (c, H, dv)
@@ -120,9 +135,7 @@ def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
                     c_kv.astype(jnp.float32))
          + jnp.einsum("blhr,bsr->bhls", q_rope.astype(jnp.float32),
                       k_rope.astype(jnp.float32))) * ((dn + dr) ** -0.5)
-    smax = c_kv.shape[1]
-    valid = jnp.arange(smax) <= index
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     lat = jnp.einsum("bhls,bsc->blhc", w, c_kv.astype(jnp.float32))
     o = jnp.einsum("blhc,chv->blhv", lat, w_v.astype(jnp.float32))

@@ -206,7 +206,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 def prefill(params: Params, batch: Dict, cfg: ModelConfig,
             ctx: Optional[ParallelContext] = None, *,
             max_seq: Optional[int] = None,
-            rng: Optional[jax.Array] = None) -> Tuple[jax.Array, List[Params]]:
+            rng: Optional[jax.Array] = None,
+            last_index: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, List[Params]]:
+    """``last_index`` (B,) selects the per-row position whose logits are
+    returned instead of the default last column — the bucketed-prefill path
+    (serve/scheduler.py) right-pads prompts to a shared length and reads
+    each row's logits at its true last prompt token. Causal masking keeps
+    positions < last_index[b] independent of the padding."""
     tokens = batch["tokens"]
     b, l = tokens.shape
     max_seq = max_seq or cfg.max_seq
@@ -229,23 +236,39 @@ def prefill(params: Params, batch: Dict, cfg: ModelConfig,
     if n_meta:
         x = x[:, n_meta:]
     x = L.norm_apply(params["final_norm"], x, cfg)
-    return _logits(params, x[:, -1:], cfg, ctx), caches
+    if last_index is not None:
+        x_last = jnp.take_along_axis(
+            x, last_index.astype(jnp.int32)[:, None, None], axis=1)
+    else:
+        x_last = x[:, -1:]
+    return _logits(params, x_last, cfg, ctx), caches
 
 
 def decode_step(params: Params, caches: List[Params], token: jax.Array,
                 index, cfg: ModelConfig,
                 ctx: Optional[ParallelContext] = None, *,
-                rng: Optional[jax.Array] = None
+                rng: Optional[jax.Array] = None,
+                local_routing: bool = False,
+                token_valid: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, List[Params]]:
-    """token: (B, 1) int32; index: absolute position of this token.
-    Gating Dropout is off at inference (paper §3: p=0, no rescaling)."""
+    """token: (B, 1) int32; index: absolute position of this token — scalar,
+    or (B,) for slot-pool decode where every row sits at its own position.
+    Gating Dropout is off at inference (paper §3: p=0, no rescaling), but
+    ``local_routing=True`` reuses its LOCAL routing path as a static
+    decision: MoE tokens route within the local expert group only, so the
+    sharded backend's decode executable contains no all-to-all (DESIGN.md
+    §9). ``token_valid`` (B,) masks rows (retired/empty pool slots) out of
+    expert-capacity competition."""
     segs = T.layer_plan(cfg)
     x = L.embed_apply(params["embed"], token).astype(cfg.dtype)
     n_meta = cfg.hybrid.n_meta_tokens if cfg.hybrid is not None else 0
     idx = index + n_meta
+    if token_valid is not None and token_valid.ndim == 1:
+        token_valid = token_valid[:, None]            # (B,) -> (B, L=1)
     x, caches, _ = T.apply_stack(params["decoder"], segs, x, cfg, ctx,
                                  mode="decode", caches=caches, index=idx,
-                                 rng=rng, decision=False, is_training=False,
-                                 token_ids=token)
+                                 rng=rng, decision=bool(local_routing),
+                                 is_training=False, token_ids=token,
+                                 token_valid=token_valid)
     x = L.norm_apply(params["final_norm"], x, cfg)
     return _logits(params, x, cfg, ctx), caches

@@ -208,10 +208,12 @@ def _init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
 # ---------------------------------------------------------------------------
 
 def _moe_or_ffn(p: Params, spec: LayerSpec, h: jax.Array, cfg: ModelConfig,
-                ctx, rng, decision, is_training, token_ids):
+                ctx, rng, decision, is_training, token_ids,
+                token_valid=None):
     if spec.moe:
         y, aux = moe_apply(p["moe"], h, cfg, ctx, rng=rng, decision=decision,
-                           is_training=is_training, token_ids=token_ids)
+                           is_training=is_training, token_ids=token_ids,
+                           token_valid=token_valid)
         if "shared" in p:
             y = y + L.ffn_apply(p["shared"], h, cfg)
         return y, aux
@@ -226,7 +228,8 @@ def _moe_or_ffn(p: Params, spec: LayerSpec, h: jax.Array, cfg: ModelConfig,
 def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
                  ctx, *, mode: str, cache: Optional[Params],
                  index, rng, decision, is_training: bool,
-                 cross_src: Optional[jax.Array], token_ids) -> Tuple[jax.Array, Optional[Params], Dict]:
+                 cross_src: Optional[jax.Array], token_ids,
+                 token_valid=None) -> Tuple[jax.Array, Optional[Params], Dict]:
     """One transformer layer. Returns (x, new_cache, aux)."""
     new_cache: Params = {}
     b, l, d = x.shape
@@ -310,7 +313,7 @@ def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
     # ---- FFN / MoE ----
     h = L.norm_apply(p["ln2"], x, cfg)
     y, aux = _moe_or_ffn(p, spec, h, cfg, ctx, rng, decision, is_training,
-                         token_ids)
+                         token_ids, token_valid)
     if spec.gated_cross:
         y = jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(y.dtype) * y
     x = x + y
@@ -414,7 +417,7 @@ def apply_stack(params: List[Params], segs: List[Segment], x: jax.Array,
                 cfg: ModelConfig, ctx, *, mode: str,
                 caches: Optional[List[Params]] = None,
                 index=None, rng=None, decision=None, is_training=True,
-                cross_src=None, token_ids=None):
+                cross_src=None, token_ids=None, token_valid=None):
     """Run all segments. Returns (x, new_caches, aux_sum)."""
     new_caches: List[Params] = []
     aux_total = None
@@ -435,7 +438,7 @@ def apply_stack(params: List[Params], segs: List[Segment], x: jax.Array,
                     cache=None if slice_c is None else slice_c[f"p{pi}"],
                     index=index, rng=lrng, decision=decision,
                     is_training=is_training, cross_src=cross_src,
-                    token_ids=token_ids)
+                    token_ids=token_ids, token_valid=token_valid)
                 if nc is not None:
                     nc_out[f"p{pi}"] = nc
                 aux_acc = aux if aux_acc is None else jax.tree.map(

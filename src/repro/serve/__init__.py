@@ -1,5 +1,13 @@
-from repro.serve.engine import (GenerateConfig, GenerateResult, generate,
-                                make_generate_fn)
+from repro.serve.engine import (GenerateConfig, GenerateResult,
+                                decode_pool_step, generate, init_slot_pool,
+                                make_generate_fn, prefill_into_slots,
+                                slot_pool_like)
+from repro.serve.scheduler import (ContinuousScheduler, Request,
+                                   RequestResult, needs_exact_prefill,
+                                   static_batch_serve)
 
 __all__ = ["GenerateConfig", "GenerateResult", "generate",
-           "make_generate_fn"]
+           "make_generate_fn", "init_slot_pool", "slot_pool_like",
+           "prefill_into_slots", "decode_pool_step", "ContinuousScheduler",
+           "Request", "RequestResult", "needs_exact_prefill",
+           "static_batch_serve"]

@@ -1,0 +1,437 @@
+"""Continuous-batching request scheduler (Orca/vLLM pattern, DESIGN.md §9).
+
+The one-shot engine compiles one ``(batch, prompt_len)`` shape and runs
+it start-to-finish: every request waits for the whole batch, the batch
+waits for its slowest sequence, and each new shape recompiles. The
+scheduler fixes all three on top of the engine's slot-pool primitives:
+
+  * a FIFO request queue with arrival times;
+  * a persistent slot pool (`engine.init_slot_pool`): each live request
+    owns one slot row of the fixed-``max_seq`` decode cache;
+  * length-bucketed admission: new prompts are right-padded to the
+    smallest configured bucket and prefilled in fixed-width groups
+    (`engine.prefill_into_slots`), so prefill compiles once per bucket;
+  * one batched decode executable over ALL slots at per-slot positions
+    (`engine.decode_pool_step`) — compile count O(buckets + 1);
+  * mid-flight admission: a slot retires the moment its request finishes
+    (EOS or per-request token budget) and is re-prefilled with the next
+    queued prompt while the other slots keep decoding.
+
+Output parity: with greedy decoding and non-binding eval expert capacity
+(``eval_capacity_factor >= n_experts``), every request's tokens are
+BITWISE identical to a per-request one-shot ``generate`` run against the
+same cache length (``GenerateConfig(max_seq=pool max_seq)``) — asserted
+in ``tests/test_scheduler.py`` and ``benchmarks/table8_serving.py``.
+Sampled requests draw from per-request key streams ``fold(fold(rng,
+seed), token_index)`` (engine._select_rows), so sampling is also
+placement-invariant given the request's ``seed``.
+
+Exactness policy: SSM-state archs (``cfg.ssm``) integrate right-padding
+into their prefilled state, and sliding-window rings evict real tokens
+when ``bucket - prompt_len`` pushes pads into the window — those configs
+are prefilled at EXACT prompt length (one compile per distinct length)
+instead of padded buckets. Attention-cache archs keep bucketed padding:
+causal masking hides pads at prefill and pool decode overwrites each pad
+cache row exactly when it would become visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.engine import (GenerateConfig, _check_local_routing,
+                                _select_rows, decode_pool_step,
+                                prefill_into_slots, slot_pool_like)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``extras`` holds the family's conditioning
+    inputs WITHOUT a batch axis (e.g. ``enc_tokens (S,)``, ``frames
+    (S, d)``). ``max_new`` caps this request's generated tokens (defaults
+    to the scheduler's ``GenerateConfig.max_new``); ``seed`` keys its
+    sampling stream; ``arrival`` is in scheduler-clock seconds."""
+    rid: int
+    tokens: np.ndarray
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    max_new: Optional[int] = None
+    seed: Optional[int] = None
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray          # (length,) generated tokens incl. EOS
+    length: int
+    score: float                # sum log p of emitted tokens
+    arrival: float              # scheduler-clock seconds
+    admitted_at: float          # prefill started (slot assigned)
+    first_token_at: float       # TTFT reference point
+    finished_at: float
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.arrival
+
+    @property
+    def per_token_latency(self) -> float:
+        return ((self.finished_at - self.arrival) / self.length
+                if self.length else 0.0)
+
+
+@functools.lru_cache(maxsize=32)
+def _pool_decode_fn(cfg: ModelConfig, gen: GenerateConfig, ctx):
+    """THE decode executable of a serving process (jit caches per pool
+    shape). Memoized so every scheduler instance over the same config
+    shares one compiled step."""
+    @jax.jit
+    def step(params, pool, tok, pos, alive, rng, seeds, steps):
+        lg, pool = decode_pool_step(params, pool, tok, pos, alive, cfg,
+                                    ctx, local_routing=gen.local_routing)
+        nxt, lp = _select_rows(gen, lg.astype(jnp.float32), rng, seeds,
+                               steps)
+        return pool, nxt, lp
+
+    return step
+
+
+@functools.lru_cache(maxsize=32)
+def _bucket_prefill_fn(cfg: ModelConfig, gen: GenerateConfig, ctx,
+                       max_seq: int):
+    """Admission executable; jit specializes per (admit_width, bucket)
+    token shape — one compile per bucket at fixed admission width."""
+    @jax.jit
+    def pf(params, batch, lengths, slots, pool, rng, seeds):
+        logits, pool = prefill_into_slots(params, batch, lengths, slots,
+                                          pool, cfg, ctx, max_seq=max_seq)
+        tok0, lp0 = _select_rows(gen, logits.astype(jnp.float32), rng,
+                                 seeds, jnp.zeros(lengths.shape, jnp.int32))
+        return pool, tok0, lp0
+
+    return pf
+
+
+def needs_exact_prefill(cfg: ModelConfig, max_bucket: int) -> bool:
+    """True when right-padded bucket prefill cannot reproduce exact-length
+    prefill: SSM state integrates pads; sliding-window rings evict real
+    tokens once the padded length exceeds the window."""
+    if cfg.ssm is not None:
+        return True
+    return cfg.sliding_window > 0 and max_bucket > cfg.sliding_window
+
+
+class ContinuousScheduler:
+    """Slot-based continuous-batching serving loop (host-side driver).
+
+    The device-side work is two jitted executables: one prefill per
+    bucket (fixed admission width) and ONE pool decode step. The host
+    keeps per-slot bookkeeping as numpy vectors, feeds them to the decode
+    step each tick, and collects one token per live slot per tick."""
+
+    def __init__(self, params, cfg: ModelConfig, gen: GenerateConfig, *,
+                 n_slots: int = 8, ctx=None,
+                 prefill_buckets: Sequence[int] = (8, 16, 32, 64),
+                 admit_width: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 rng: Optional[jax.Array] = None):
+        assert gen.beam_width == 1, "continuous batching serves sampling/" \
+            "greedy requests; beam search stays on the one-shot engine"
+        _check_local_routing(cfg, gen)
+        self.params = params
+        self.cfg = cfg
+        self.gen = gen
+        self.ctx = ctx
+        self.n_slots = n_slots
+        self.buckets = tuple(sorted(prefill_buckets))
+        self.exact_prefill = needs_exact_prefill(cfg, self.buckets[-1])
+        self.admit_width = admit_width or min(4, n_slots)
+        self.max_seq = max_seq or (self.buckets[-1] + gen.max_new)
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # pool row n_slots is a scratch slot: admission groups are padded
+        # with dummy rows that scatter there. Allocation is deferred to
+        # the first admission (slot_pool_like): cross-KV leaf length
+        # follows the conditioning inputs actually served, which may
+        # differ from config defaults.
+        self.pool = None
+        self._extras_shapes: Optional[Dict[str, Tuple]] = None
+        S = n_slots + 1
+        self._tok = np.zeros(S, np.int32)
+        self._pos = np.zeros(S, np.int32)
+        self._ngen = np.zeros(S, np.int32)
+        self._active = np.zeros(S, bool)
+        self._done = np.zeros(S, bool)
+        self._budget = np.full(S, gen.max_new, np.int32)
+        self._length = np.zeros(S, np.int32)
+        self._score = np.zeros(S, np.float64)
+        self._seed = np.zeros(S, np.int32)
+        self._slot_rid: List[Optional[int]] = [None] * S
+        self._free = deque(range(n_slots))
+        self._queue: deque[Request] = deque()
+        self._buffers: Dict[int, List[int]] = {}
+        self._meta: Dict[int, Dict[str, float]] = {}
+        self._reqs: Dict[int, Request] = {}
+        self.stats = {"admitted": 0, "finished": 0, "prefill_calls": 0,
+                      "decode_steps": 0, "max_concurrent": 0,
+                      "slot_reuse": 0}
+        self._slot_uses = np.zeros(n_slots, np.int64)
+        self._prefill = _bucket_prefill_fn(cfg, gen, ctx, self.max_seq)
+        self._decode_fn = _pool_decode_fn(cfg, gen, ctx)
+        # clock state so the tick API (submit + step) works without run()
+        self._t0 = time.perf_counter()
+        self._skip = 0.0
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, req: Request):
+        assert req.tokens.ndim == 1
+        if not self.exact_prefill:
+            assert len(req.tokens) <= self.buckets[-1], \
+                f"prompt {len(req.tokens)} exceeds largest bucket"
+        budget = req.max_new or self.gen.max_new
+        assert budget <= self.gen.max_new
+        # holds for bucketed admission by construction (bucket + max_new
+        # <= max_seq); the exact-prefill path (SSM/oversized-window) has
+        # no bucket cap, and an overflow would silently drop cache writes
+        assert len(req.tokens) + budget <= self.max_seq, \
+            f"prompt {len(req.tokens)} + budget {budget} exceeds pool " \
+            f"max_seq {self.max_seq}; raise max_seq= at scheduler init"
+        self._queue.append(req)
+        self._reqs[req.rid] = req
+        self._meta[req.rid] = {"arrival": req.arrival}
+
+    def _bucket(self, n: int) -> int:
+        if self.exact_prefill:
+            return n
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise AssertionError(n)
+
+    # -- scheduling ticks ---------------------------------------------------
+
+    def _retire(self, now: float) -> List[RequestResult]:
+        out = []
+        for s in range(self.n_slots):
+            rid = self._slot_rid[s]
+            if rid is None or not self._done[s]:
+                continue
+            meta = self._meta[rid]
+            out.append(RequestResult(
+                rid=rid, tokens=np.asarray(self._buffers[rid], np.int32),
+                length=int(self._length[s]), score=float(self._score[s]),
+                arrival=meta["arrival"], admitted_at=meta["admitted_at"],
+                first_token_at=meta["first_token_at"], finished_at=now))
+            self._slot_rid[s] = None
+            self._active[s] = False
+            self._done[s] = False
+            self._free.append(s)
+            self.stats["finished"] += 1
+        return out
+
+    def _token_done(self, tok: int, ngen: int, budget: int) -> bool:
+        """One-shot `_advance` semantics: done on EOS or budget reached."""
+        return (self.gen.eos_id >= 0 and tok == self.gen.eos_id) \
+            or ngen >= budget
+
+    def _admit(self, now: float):
+        while self._free and self._queue \
+                and self._queue[0].arrival <= now:
+            # head-of-queue request sets the bucket; scan the ELIGIBLE
+            # queue prefix for same-bucket peers so admission groups fill
+            # up instead of fragmenting into per-request prefills (the
+            # head request is always admitted — no starvation)
+            bucket = self._bucket(len(self._queue[0].tokens))
+            group: List[Request] = []
+            skipped: List[Request] = []
+            while (self._queue and len(group) < self.admit_width
+                   and len(group) < len(self._free)
+                   and self._queue[0].arrival <= now):
+                r = self._queue.popleft()
+                if self._bucket(len(r.tokens)) == bucket:
+                    group.append(r)
+                else:
+                    skipped.append(r)
+            for r in reversed(skipped):
+                self._queue.appendleft(r)
+            if not group:
+                break
+            self._prefill_group(group, bucket, now)
+
+    def _prefill_group(self, group: List[Request], bucket: int, now: float):
+        # pad the group to the next power-of-two width (<= admit_width):
+        # mid-flight single-slot refills cost a width-1 prefill, not a
+        # full admit_width one; compile count stays O(buckets * log W)
+        W = 1
+        while W < len(group):
+            W *= 2
+        pad = self.gen.pad_id
+        tokens = np.full((W, bucket), pad, np.int32)
+        lengths = np.ones(W, np.int32)
+        slots = np.full(W, self.n_slots, np.int32)      # dummies -> scratch
+        seeds = np.zeros(W, np.int32)
+        for i, req in enumerate(group):
+            tokens[i, :len(req.tokens)] = req.tokens
+            lengths[i] = len(req.tokens)
+            s = self._free.popleft()
+            slots[i] = s
+            seeds[i] = req.seed if req.seed is not None else req.rid
+            self._slot_rid[s] = req.rid
+            self._slot_uses[s] += 1
+            if self._slot_uses[s] > 1:
+                self.stats["slot_reuse"] += 1
+        batch = {"tokens": jnp.asarray(tokens)}
+        for k in group[0].extras:
+            rows = np.stack([r.extras[k] for r in group])
+            if len(group) < W:
+                fill = np.zeros((W - len(group),) + rows.shape[1:],
+                                rows.dtype)
+                rows = np.concatenate([rows, fill], 0)
+            batch[k] = jnp.asarray(rows)
+        shapes = {k: tuple(v.shape[1:]) for k, v in batch.items()
+                  if k != "tokens"}
+        if self.pool is None:
+            self._extras_shapes = shapes
+            self.pool = slot_pool_like(self.params, batch, self.cfg,
+                                       self.ctx, max_seq=self.max_seq,
+                                       n_slots=self.n_slots + 1)
+        else:
+            assert shapes == self._extras_shapes, \
+                "every request of a serving process must carry the same " \
+                f"conditioning shapes: {shapes} != {self._extras_shapes}"
+        pool, tok0, lp0 = self._prefill(
+            self.params, batch, jnp.asarray(lengths), jnp.asarray(slots),
+            self.pool, self.rng, jnp.asarray(seeds))
+        self.pool = pool
+        tok0 = np.asarray(tok0)
+        lp0 = np.asarray(lp0)
+        t_first = self._now()
+        for i, req in enumerate(group):
+            s = int(slots[i])
+            self._tok[s] = tok0[i]
+            self._pos[s] = lengths[i]          # tok0 lives at position P
+            self._ngen[s] = 1
+            self._active[s] = True
+            self._budget[s] = req.max_new or self.gen.max_new
+            self._done[s] = self._token_done(int(tok0[i]), 1,
+                                             int(self._budget[s]))
+            self._length[s] = 1
+            self._score[s] = lp0[i]
+            self._seed[s] = seeds[i]
+            self._buffers[req.rid] = [int(tok0[i])]
+            self._meta[req.rid].update(admitted_at=now,
+                                       first_token_at=t_first)
+            self.stats["admitted"] += 1
+        self.stats["prefill_calls"] += 1
+        self.stats["max_concurrent"] = max(
+            self.stats["max_concurrent"],
+            int(self._active[:self.n_slots].sum()))
+
+    def _decode_tick(self):
+        alive = self._active & ~self._done
+        if not alive[:self.n_slots].any():
+            return
+        pool, nxt, lp = self._decode_fn(
+            self.params, self.pool, jnp.asarray(self._tok),
+            jnp.asarray(self._pos), jnp.asarray(alive), self.rng,
+            jnp.asarray(self._seed), jnp.asarray(self._ngen))
+        self.pool = pool
+        nxt = np.asarray(nxt)
+        lp = np.asarray(lp)
+        for s in range(self.n_slots):
+            if not alive[s]:
+                continue
+            self._buffers[self._slot_rid[s]].append(int(nxt[s]))
+            self._tok[s] = nxt[s]
+            self._pos[s] += 1
+            self._ngen[s] += 1
+            self._length[s] += 1
+            self._score[s] += float(lp[s])
+            self._done[s] = self._token_done(int(nxt[s]),
+                                             int(self._ngen[s]),
+                                             int(self._budget[s]))
+        self.stats["decode_steps"] += 1
+
+    # -- driving loop -------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0 + self._skip
+
+    def step(self, now: float) -> List[RequestResult]:
+        """One scheduler tick: retire finished slots, admit eligible
+        queued requests into freed slots, run one pool decode step."""
+        finished = self._retire(now)
+        self._admit(now)
+        self._decode_tick()
+        return finished
+
+    def run(self, requests: Sequence[Request]) -> List[RequestResult]:
+        """Serve ``requests`` (arrival-stamped) to completion. The clock
+        is wall time, fast-forwarded across idle gaps between arrivals so
+        sparse traces don't busy-wait."""
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.submit(r)
+        self._t0 = time.perf_counter()
+        self._skip = 0.0
+        results: List[RequestResult] = []
+        while self._queue or self._active[:self.n_slots].any():
+            now = self._now()
+            if (not self._active[:self.n_slots].any() and self._queue
+                    and self._queue[0].arrival > now):
+                self._skip += self._queue[0].arrival - now
+                now = self._now()
+            results.extend(self.step(now))
+        results.extend(self._retire(self._now()))
+        return sorted(results, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# static-batching baseline (table8's comparison point)
+# ---------------------------------------------------------------------------
+
+def static_batch_serve(params, cfg: ModelConfig, gen: GenerateConfig,
+                       requests: Sequence[Request], *, batch_size: int,
+                       ctx=None, rng: Optional[jax.Array] = None,
+                       max_seq: Optional[int] = None
+                       ) -> Tuple[Dict[int, np.ndarray], float]:
+    """Pre-refactor serving shape: group requests FIFO into same-length
+    batches of ``batch_size`` and run the one-shot engine batch by batch.
+    Every batch runs until its slowest member finishes (max_new or all-
+    EOS); per-request outputs are truncated to the request's budget —
+    greedy decoding is prefix-stable, so truncation equals a shorter run.
+    Returns ({rid: tokens}, wall_seconds)."""
+    from repro.serve.engine import generate
+    groups: Dict[Tuple[int, ...], List[Request]] = {}
+    order: List[List[Request]] = []
+    for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+        key = (len(r.tokens),)
+        g = groups.get(key)
+        if g is None or len(g) >= batch_size:
+            g = groups[key] = []
+            order.append(g)
+        g.append(r)
+    g2 = dataclasses.replace(gen, max_seq=max_seq or gen.max_seq)
+    out: Dict[int, np.ndarray] = {}
+    t0 = time.perf_counter()
+    for g in order:
+        batch = {"tokens": jnp.asarray(np.stack([r.tokens for r in g]))}
+        for k in g[0].extras:
+            batch[k] = jnp.asarray(np.stack([r.extras[k] for r in g]))
+        # engine instances cache on (cfg, gen, ctx) + batch shape, so a
+        # warmed-up trace replay pays zero compiles
+        res = jax.block_until_ready(generate(params, batch, cfg, g2, ctx,
+                                             rng))
+        toks = np.asarray(res.tokens)
+        lens = np.asarray(res.lengths)
+        for i, r in enumerate(g):
+            n = min(int(lens[i]), r.max_new or gen.max_new)
+            out[r.rid] = toks[i, :n]
+    return out, time.perf_counter() - t0

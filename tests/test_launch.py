@@ -1,6 +1,7 @@
-"""Launcher smoke coverage: `python -m repro.launch.train` end to end in a
-subprocess (the exact user entrypoint — argparse, Trainer wiring, BLEU
-eval, --json-out), asserting the JSON history is well-formed."""
+"""Launcher smoke coverage: `python -m repro.launch.{train,serve}` end to
+end in a subprocess (the exact user entrypoints — argparse, Trainer /
+scheduler wiring, --json-out), asserting the JSON outputs are
+well-formed."""
 import json
 import os
 import subprocess
@@ -12,10 +13,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
-def run_module(args, timeout=540):
+def run_module(args, timeout=540, module="repro.launch.train"):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+    r = subprocess.run([sys.executable, "-m", module] + args,
                        capture_output=True, text=True, env=env,
                        timeout=timeout)
     assert r.returncode == 0, f"launcher failed:\n{r.stdout}\n{r.stderr}"
@@ -57,3 +58,29 @@ def test_train_cli_smoke_json_history(tmp_path):
     assert all(np.isfinite(r["bleu"]) for r in hist if "bleu" in r)
     # stdout mirrors the history as JSON lines
     assert any('"step": 7' in l for l in stdout.splitlines())
+
+
+def test_serve_cli_trace_smoke_json(tmp_path):
+    """Continuous-batching serving loop end to end (DESIGN.md §9):
+    synthetic Poisson trace through the scheduler, --json-out schema the
+    benchmarks consume, every request admitted AND finished."""
+    out_json = str(tmp_path / "serve.json")
+    run_module(["--arch", "yi-6b", "--reduced", "--trace", "6",
+                "--rate", "500", "--slots", "2", "--max-new", "6",
+                "--buckets", "8", "--eos", "-1",
+                "--json-out", out_json], module="repro.launch.serve")
+    with open(out_json) as f:
+        rec = json.load(f)
+    assert rec["mode"] == "continuous"
+    assert rec["n_requests"] == 6
+    assert rec["scheduler"]["admitted"] == 6
+    assert rec["scheduler"]["finished"] == 6
+    assert rec["scheduler"]["max_concurrent"] <= 2
+    # eos disabled: every request runs to its sampled budget in [2, 6]
+    assert 6 * 2 <= rec["n_tokens"] <= 6 * 6
+    assert rec["tok_s"] > 0
+    for p in ("50", "90", "99"):
+        assert np.isfinite(rec["ttft_s"][p])
+        assert np.isfinite(rec["per_token_latency_s"][p])
+    # mid-flight admission: 6 requests through 2 slots -> slots reused
+    assert rec["scheduler"]["slot_reuse"] >= 4

@@ -1,0 +1,231 @@
+"""Continuous-batching scheduler tests (repro.serve.scheduler, DESIGN.md §9).
+
+The regression anchor is BITWISE per-request parity: a staggered
+mixed-length trace served through the slot pool — bucketed padded
+prefill, mid-flight admission into freed slots, per-slot positions, EOS
+early exits — must emit token-for-token what a per-request one-shot
+``generate`` (B=1, pool cache length) emits, across cache families and
+MoE backends. MoE configs get non-binding eval capacity: expert-capacity
+truncation is the one cross-request coupling of the batched decode, so
+serving parity requires it off (DESIGN.md §9).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_py
+from repro.configs import get_config, reduced
+from repro.models import decode_step, init_model, prefill
+from repro.serve import (ContinuousScheduler, GenerateConfig, Request,
+                         generate)
+from repro.serve.engine import _cache_batch_axes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch, backend=None):
+    cfg = reduced(get_config(arch))
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, eval_capacity_factor=float(cfg.moe.n_experts),
+            **({"backend": backend} if backend else {}))
+        cfg = dataclasses.replace(cfg, moe=moe)
+    return cfg
+
+
+def _requests(cfg, n, lens, budgets, stagger=0.0):
+    rng = jax.random.fold_in(KEY, 1)
+    reqs = []
+    for i in range(n):
+        L = lens[i % len(lens)]
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, i), (L,), 3, cfg.vocab), np.int32)
+        extras = {}
+        if cfg.encdec is not None:
+            if cfg.encdec.frontend == "stub":
+                extras["frames"] = np.asarray(jax.random.normal(
+                    jax.random.fold_in(rng, 100 + i),
+                    (cfg.encdec.encoder_seq, cfg.d_model)), np.float32)
+            else:
+                extras["enc_tokens"] = np.asarray(jax.random.randint(
+                    jax.random.fold_in(rng, 100 + i), (32,), 3, cfg.vocab),
+                    np.int32)
+        reqs.append(Request(rid=i, tokens=toks, extras=extras,
+                            max_new=budgets[i % len(budgets)],
+                            arrival=i * stagger))
+    return reqs
+
+
+def _assert_parity(params, cfg, gen, sched, results, reqs):
+    """Every request's scheduler tokens == one-shot generate (B=1) at the
+    pool's cache length, truncated to the request budget (greedy decoding
+    is prefix-stable)."""
+    gref = dataclasses.replace(gen, max_seq=sched.max_seq)
+    assert len(results) == len(reqs)
+    for res, req in zip(results, reqs):
+        assert res.rid == req.rid
+        batch = {"tokens": req.tokens[None]}
+        for k, v in req.extras.items():
+            batch[k] = v[None]
+        one = generate(params, batch, cfg, gref)
+        n = min(int(one.lengths[0]), req.max_new)
+        ref = np.asarray(one.tokens)[0, :n]
+        np.testing.assert_array_equal(res.tokens, ref,
+                                      err_msg=f"request {req.rid}")
+
+
+# ---------------------------------------------------------------------------
+# staggered mixed-length parity across cache families / backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,backend", [
+    ("yi-6b", None),               # dense dec-only, full KV cache
+    ("zcode-m3-base", None),       # enc-dec MoE, oracle backend
+    ("zcode-m3-base", "pallas"),   # enc-dec MoE, kernel pipeline
+])
+def test_continuous_matches_oneshot(arch, backend):
+    cfg = _cfg(arch, backend)
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=10, eos_id=-1)
+    reqs = _requests(cfg, 6, lens=[5, 8, 3, 7], budgets=[6, 10, 4],
+                     stagger=1e-3)
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=2,
+                                prefill_buckets=(8,), admit_width=2)
+    results = sched.run(reqs)
+    # mid-flight admission actually happened: more requests than slots,
+    # so freed slots were reused while others kept decoding
+    assert sched.stats["slot_reuse"] >= len(reqs) - 2
+    assert sched.stats["max_concurrent"] == 2
+    _assert_parity(params, cfg, gen, sched, results, reqs)
+
+
+def test_continuous_exact_prefill_ssm():
+    """SSM state integrates right-padding, so mamba routes through the
+    exact-length prefill policy — and still matches one-shot bitwise."""
+    cfg = _cfg("mamba2-1.3b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=8, eos_id=-1)
+    reqs = _requests(cfg, 4, lens=[4, 7, 6], budgets=[5, 8, 3])
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=2,
+                                prefill_buckets=(8,), admit_width=2)
+    assert sched.exact_prefill
+    results = sched.run(reqs)
+    _assert_parity(params, cfg, gen, sched, results, reqs)
+
+
+def test_continuous_eos_early_exit():
+    """Declare a token the model actually emits to be EOS: the request
+    that hits it retires early (freeing its slot) and both paths agree."""
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    free = GenerateConfig(max_new=10, eos_id=-1)
+    reqs = _requests(cfg, 4, lens=[5, 8], budgets=[10])
+    sched = ContinuousScheduler(params, cfg, free, n_slots=2,
+                                prefill_buckets=(8,), admit_width=2)
+    results = sched.run(reqs)
+    eos = int(results[0].tokens[3])        # 4th token of request 0
+    gen = dataclasses.replace(free, eos_id=eos)
+    sched2 = ContinuousScheduler(params, cfg, gen, n_slots=2,
+                                 prefill_buckets=(8,), admit_width=2)
+    results2 = sched2.run(reqs)
+    by_rid = {r.rid: r for r in results2}
+    first = int(np.asarray(results[0].tokens == eos).argmax())
+    assert by_rid[0].length == first + 1 < 10      # stopped at its EOS
+    assert by_rid[0].tokens[-1] == eos
+    _assert_parity(params, cfg, gen, sched2, results2, reqs)
+
+
+def test_continuous_sampling_placement_invariant():
+    """temperature>0: requests submitted with explicit seed draw from
+    per-request key streams, so the pooled samples equal one-shot B=1
+    samples run with the same rng/seed."""
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=6, eos_id=-1, temperature=0.8, top_k=8)
+    reqs = [dataclasses.replace(r, seed=0)
+            for r in _requests(cfg, 4, lens=[5, 8], budgets=[6])]
+    rng = jax.random.PRNGKey(3)
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=2,
+                                prefill_buckets=(8,), admit_width=2,
+                                rng=rng)
+    results = sched.run(reqs)
+    gref = dataclasses.replace(gen, max_seq=sched.max_seq)
+    for res, req in zip(results, reqs):
+        one = generate(params, {"tokens": req.tokens[None]}, cfg, gref,
+                       rng=rng)
+        n = min(int(one.lengths[0]), req.max_new)
+        np.testing.assert_array_equal(res.tokens,
+                                      np.asarray(one.tokens)[0, :n])
+
+
+# ---------------------------------------------------------------------------
+# slot-pool decode primitives
+# ---------------------------------------------------------------------------
+
+def test_vector_index_decode_equals_scalar():
+    """decode_step with a constant (B,) index vector is bitwise-equal to
+    the scalar-index path — the invariant that makes the one-shot driver
+    a thin wrapper over the pool core."""
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 6), 3, cfg.vocab)}
+    lg, caches = prefill(params, batch, cfg, max_seq=12)
+    tok = lg.argmax(-1).astype(jnp.int32)
+    s_lg, _ = decode_step(params, caches, tok, 6, cfg)
+    v_lg, _ = decode_step(params, caches, tok, jnp.array([6, 6]), cfg)
+    np.testing.assert_array_equal(np.asarray(s_lg), np.asarray(v_lg))
+
+
+def test_cache_batch_axes_memoized():
+    """The structural cache discovery runs its eval_shape builds once per
+    ModelConfig (it used to re-run on every beam-engine trace)."""
+    cfg = _cfg("yi-6b")
+    _cache_batch_axes(cfg)
+    before = _cache_batch_axes.cache_info().hits
+    _cache_batch_axes(cfg)
+    assert _cache_batch_axes.cache_info().hits == before + 1
+
+
+# ---------------------------------------------------------------------------
+# local routing: decode executable has NO all-to-all (sharded backend)
+# ---------------------------------------------------------------------------
+
+def test_local_routing_decode_has_no_alltoall():
+    """GenerateConfig.local_routing reuses the Gate-Drop local path as a
+    STATIC decision: the sharded backend's pool-decode executable must
+    contain zero all-to-all ops, while routed decode contains them — the
+    serving twin of the trainer's dropped-chunk test."""
+    out = run_py("""
+import jax, jax.numpy as jnp
+from repro.configs.base import (GatingDropoutConfig, ModelConfig, MoEConfig)
+from repro.core.moe import ParallelContext
+from repro.launch.mesh import make_mesh
+from repro.models import init_model
+from repro.serve import GenerateConfig, decode_pool_step, init_slot_pool
+mesh = make_mesh((8,), ('data',))
+ctx = ParallelContext(mesh=mesh)
+cfg = ModelConfig(d_model=64, d_ff=128, vocab=100, n_layers=1, n_heads=2,
+                  n_kv_heads=2, remat=False, dtype='float32',
+                  param_dtype='float32',
+                  moe=MoEConfig(n_experts=8, top_k=1, d_ff_expert=128,
+                                backend='sharded',
+                                gating_dropout=GatingDropoutConfig(
+                                    mode='gate_drop', rate=0.3)))
+params = init_model(jax.random.PRNGKey(0), cfg)
+S = 8
+pool = init_slot_pool(cfg, S, 32)
+tok = jnp.zeros((S,), jnp.int32)
+pos = jnp.full((S,), 4, jnp.int32)
+alive = jnp.ones((S,), bool)
+for local, name in [(False, 'routed'), (True, 'local')]:
+    fn = jax.jit(lambda p, c, t, i, a: decode_pool_step(
+        p, c, t, i, a, cfg, ctx, local_routing=local))
+    txt = fn.lower(params, pool, tok, pos, alive).compile().as_text()
+    print(name, txt.count('all-to-all'))
+""")
+    lines = dict(l.split() for l in out.strip().splitlines())
+    assert int(lines["routed"]) > 0
+    assert int(lines["local"]) == 0
