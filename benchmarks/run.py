@@ -60,6 +60,11 @@ def bench_table8(fast):
     return main(fast)
 
 
+def bench_table9(fast):
+    from benchmarks.table9_comm import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -102,6 +107,7 @@ BENCHES = {
     "table6": bench_table6,
     "table7": bench_table7,
     "table8": bench_table8,
+    "table9": bench_table9,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

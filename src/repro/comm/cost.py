@@ -1,0 +1,180 @@
+"""Analytic bytes model for the communication substrate (DESIGN.md §10).
+
+THE single source of truth for "how many bytes does a routed MoE layer
+move": the in-graph telemetry counters (`comm/substrate.py`) are computed
+FROM these functions, and `tests/test_comm.py` pins both against the
+collective ops parsed out of compiled HLO (`launch/hlo_analysis.py::
+parse_collectives`), so the three views — counters in the metrics stream,
+this model, and the executable itself — cannot drift apart.
+
+Conventions (chosen to match ``parse_collectives`` exactly):
+
+  * ``bytes``       -- sum over all-to-all ops of the per-device RESULT
+                       bytes (an a2a preserves element count, so this is
+                       also the per-device send buffer size).
+  * ``wire_bytes``  -- per-device traffic actually crossing the wire:
+                       ``bytes * (g - 1) / g`` per op for an a2a over a
+                       group of ``g`` (a device keeps its own chunk).
+  * ``calls``       -- number of all-to-all ops.
+
+Pure host math — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+from repro.configs.base import CommConfig, ModelConfig
+
+_QUANT_ITEMSIZE = {"int8": 1, "fp8": 1}
+_SCALE_ITEMSIZE = 4          # one f32 scale per (expert, capacity-slot) row
+
+
+def factored_ep(ep: int, ep_inner: int = 0):
+    """Factor an expert-parallel group of ``ep`` ranks into
+    ``(ep_inner, ep_outer)`` tiers for the hierarchical substrate
+    (DESIGN.md §10): rank r = outer * ep_inner + inner, i.e. consecutive
+    ranks share a tier (machine/node), mirroring how pods enumerate chips.
+    ``ep_inner == 0`` picks the largest divisor <= sqrt(ep), so the two
+    hops are as square as possible. Re-exported by
+    ``parallel/sharding.py`` next to the mesh partition rules."""
+    if ep_inner == 0:
+        ep_inner = max(g for g in range(1, int(math.isqrt(ep)) + 1)
+                       if ep % g == 0)
+    assert ep % ep_inner == 0, (ep, ep_inner)
+    return ep_inner, ep // ep_inner
+
+
+def ep_tier_groups(ep: int, ep_inner: int = 0):
+    """``axis_index_groups`` for the two hierarchical hops over ONE mesh
+    axis of size ``ep``: ``intra`` groups hold the ``ep_inner``
+    consecutive ranks of each tier; ``inter`` groups hold the ranks with
+    equal intra-tier index, strided by ``ep_inner`` — the member index
+    within a group is the tier index, which the two-hop exchange algebra
+    relies on."""
+    gi, go = factored_ep(ep, ep_inner)
+    intra = tuple(tuple(o * gi + i for i in range(gi)) for o in range(go))
+    inter = tuple(tuple(o * gi + i for o in range(go)) for i in range(gi))
+    return intra, inter
+
+
+def _a2a(elems: int, itemsize: int, g: int) -> Dict[str, float]:
+    b = float(elems * itemsize)
+    return {"calls": 1.0, "bytes": b, "wire_bytes": b * (g - 1) / max(g, 1)}
+
+
+def _acc(total: Dict[str, float], op: Dict[str, float], tier: str) -> None:
+    for k, v in op.items():
+        total[k] += v
+    total[f"{tier}_wire_bytes"] += op["wire_bytes"]
+
+
+def transport_cost(comm: CommConfig, *, ep: int, n_experts: int, cap: int,
+                   d_model: int, itemsize: int,
+                   tiers: Optional[tuple] = None) -> Dict[str, float]:
+    """Bytes/calls of ONE routed layer's transport (dispatch + combine)
+    per device. ``itemsize`` is the activation dtype's wire width for the
+    uncompressed payload; ``tiers`` (gi, go) overrides the hierarchical
+    factorization when the mesh fixes it (ep_on_model: tiers are the
+    (model, data) axes themselves). Keys: calls, bytes, wire_bytes,
+    intra_wire_bytes, inter_wire_bytes. A flat substrate's single hop
+    spans every tier, so ALL its wire counts as inter-tier — the
+    pessimistic cross-machine bytes the paper targets; hierarchical
+    substrates split the wire between the two tiers."""
+    rows = n_experts * cap
+    elems = rows * d_model
+    total = {"calls": 0.0, "bytes": 0.0, "wire_bytes": 0.0,
+             "intra_wire_bytes": 0.0, "inter_wire_bytes": 0.0}
+    # tensors crossing the wire per direction: [(elems, itemsize, name)]
+    if comm.compressed:
+        wire = [(elems, _QUANT_ITEMSIZE[comm.quant]),
+                (rows, _SCALE_ITEMSIZE)]
+    else:
+        wire = [(elems, itemsize)]
+    if comm.hierarchical:
+        gi, go = tiers or factored_ep(ep, comm.ep_inner)
+        hops = [(gi, "intra"), (go, "inter")]
+    else:
+        hops = [(ep, "inter")]
+    # a group-of-1 exchange moves nothing and XLA deletes the op from the
+    # executable — skip it so telemetry == HLO holds at ep=1 and for
+    # degenerate hierarchical factorizations (prime ep -> ep_inner=1)
+    hops = [(g, tier) for g, tier in hops if g > 1]
+    for _direction in ("dispatch", "combine"):
+        for g, tier in hops:
+            for e, isz in wire:
+                _acc(total, _a2a(e, isz, g), tier)
+    return total
+
+
+def routed_capacity(cfg: ModelConfig, tokens_per_shard: int, *,
+                    is_training: bool = True) -> int:
+    """Per-shard expert buffer capacity of a routed step — the same
+    formula every backend uses (core/moe.py::_routed_shard)."""
+    from repro.core.router import capacity
+    moe = cfg.moe
+    cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
+    return min(capacity(tokens_per_shard, moe.n_experts, moe.top_k, cf),
+               tokens_per_shard)
+
+
+def layer_cost(cfg: ModelConfig, *, tokens_per_shard: int, ep: int,
+               comm: Optional[CommConfig] = None,
+               is_training: bool = True) -> Dict[str, float]:
+    """Transport cost of one routed MoE layer for a model config."""
+    moe = cfg.moe
+    assert moe is not None
+    import numpy as np
+    itemsize = np.dtype(cfg.dtype).itemsize
+    return transport_cost(
+        comm if comm is not None else moe.comm, ep=ep,
+        n_experts=moe.n_experts,
+        cap=routed_capacity(cfg, tokens_per_shard, is_training=is_training),
+        d_model=cfg.d_model, itemsize=itemsize)
+
+
+def step_cost(cfg: ModelConfig, *, tokens_per_shard: int, ep: int,
+              comm: Optional[CommConfig] = None, is_training: bool = True,
+              backward: bool = False) -> Dict[str, float]:
+    """Transport cost of one ROUTED model step: ``layer_cost`` x the
+    number of MoE layers; ``backward=True`` doubles everything (the VJP
+    of every wire hop is the reverse hop — exact when ``remat`` is off;
+    remat recomputes the forward inside the backward, adding one more
+    forward's worth of collectives on top)."""
+    from repro.training.steps import n_moe_layers
+    per = layer_cost(cfg, tokens_per_shard=tokens_per_shard, ep=ep,
+                     comm=comm, is_training=is_training)
+    mult = n_moe_layers(cfg) * (2 if backward else 1)
+    return {k: v * mult for k, v in per.items()}
+
+
+def substrate_table(cfg: ModelConfig, *, tokens_per_shard: int, ep: int,
+                    is_training: bool = True,
+                    quant: str = "int8") -> Dict[str, Dict[str, float]]:
+    """Predicted per-step forward bytes for EVERY registered substrate at
+    a given factorization — the ``launch/dryrun.py --comm-table`` payload.
+    Pure math: nothing is lowered or compiled."""
+    import dataclasses
+    out = {}
+    for name in ("dense", "hierarchical", "compressed",
+                 "hierarchical_compressed"):
+        comm = dataclasses.replace(cfg.moe.comm, substrate=name,
+                                   quant=quant)
+        out[name] = step_cost(cfg, tokens_per_shard=tokens_per_shard,
+                              ep=ep, comm=comm, is_training=is_training)
+    return out
+
+
+def format_table(table: Dict[str, Dict[str, float]]) -> str:
+    """Human-readable substrate comparison (MiB per device per step)."""
+    hdr = (f"{'substrate':<26}{'a2a':>5}{'bytes MiB':>12}"
+           f"{'wire MiB':>11}{'inter MiB':>11}{'vs dense':>10}")
+    lines = [hdr, "-" * len(hdr)]
+    base = table.get("dense", {}).get("wire_bytes", 0.0) or math.inf
+    for name, c in table.items():
+        rel = c["wire_bytes"] / base if base else 0.0
+        lines.append(
+            f"{name:<26}{int(c['calls']):>5}{c['bytes']/2**20:>12.2f}"
+            f"{c['wire_bytes']/2**20:>11.2f}"
+            f"{c['inter_wire_bytes']/2**20:>11.2f}{rel:>9.2f}x")
+    return "\n".join(lines)

@@ -49,6 +49,55 @@ class GatingDropoutConfig:
 
 
 # ---------------------------------------------------------------------------
+# Communication substrate (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CommConfig:
+    """Collective-communication substrate for the MoE dispatch/combine path
+    (comm/substrate.py registry, DESIGN.md §10).
+
+    substrate:
+      "dense"                   -- single-hop all-to-all over the full ep
+                                   group (the historical inline path).
+      "hierarchical"            -- two-hop all-to-all over a factored
+                                   ep = ep_inner x ep_outer group:
+                                   intra-tier exchange first, then
+                                   inter-tier — same permutation as dense
+                                   (bitwise), 1/ep_inner the inter-tier
+                                   message count.
+      "compressed"              -- dense topology, payload quantized to
+                                   ``quant`` with one f32 scale per
+                                   (expert, slot) row; dequant on arrival;
+                                   custom VJP (straight-through + the
+                                   reverse wire also compressed) so the
+                                   routed path still trains.
+      "hierarchical_compressed" -- both.
+    quant: wire dtype for compressed substrates: "int8" | "fp8"
+      (float8_e4m3fn).
+    ep_inner: intra-tier group size for hierarchical substrates (must
+      divide ep); 0 = auto (largest divisor <= sqrt(ep)).
+    """
+    substrate: str = "dense"
+    quant: str = "int8"
+    ep_inner: int = 0
+
+    def __post_init__(self):
+        assert self.substrate in ("dense", "hierarchical", "compressed",
+                                  "hierarchical_compressed"), self.substrate
+        assert self.quant in ("int8", "fp8"), self.quant
+        assert self.ep_inner >= 0
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.substrate.startswith("hierarchical")
+
+    @property
+    def compressed(self) -> bool:
+        return self.substrate.endswith("compressed")
+
+
+# ---------------------------------------------------------------------------
 # MoE
 # ---------------------------------------------------------------------------
 
@@ -72,6 +121,8 @@ class MoEConfig:
     # Execution backend (core/backend.py registry, DESIGN.md §6):
     #   auto | oracle | sharded | pallas
     backend: str = "auto"
+    # Collective-communication substrate for dispatch/combine (DESIGN.md §10)
+    comm: CommConfig = field(default_factory=CommConfig)
     gating_dropout: GatingDropoutConfig = field(default_factory=GatingDropoutConfig)
 
     def __post_init__(self):

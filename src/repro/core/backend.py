@@ -118,6 +118,8 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
                                    token_ids=token_ids,
                                    token_valid=token_valid)
 
+    from repro.comm import CommEnv, make_transport
+
     moe = cfg.moe
     shape = x.shape
     xf = x.reshape(-1, shape[-1])
@@ -130,16 +132,21 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
     experts = params["experts"]
     cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
     cap = min(R.capacity(T, E, moe.top_k, cf), T)
+    # ep=1 wire: no movement, but the payload transform (compressed
+    # substrates' quant->dequant) still applies so backend choice never
+    # changes numerics vs the oracle (DESIGN.md §10)
+    transport = make_transport(moe.comm, CommEnv(ep=1))
 
     def _pipeline(info: R.DispatchInfo) -> jax.Array:
         tables = K.routing_tables(info, E, cap)    # built once, reused twice
         buf = K.dispatch(xf, tables.slot_token, tables.slot_valid,
                          interpret=interpret).reshape(E, cap, -1)
+        buf = transport.roundtrip(buf)
         w_in = experts["w_in"]
         out = K.expert_ffn_op(buf.astype(w_in.dtype), w_in,
                               experts.get("w_gate"), experts["w_out"],
                               cfg.act, interpret=interpret)
-        out = out.astype(xf.dtype)
+        out = transport.roundtrip(out.astype(xf.dtype))
         return K.combine(out.reshape(E * cap, -1), tables.token_slot,
                          info.topk_w, info.keep, interpret=interpret)
 
@@ -147,7 +154,9 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
         rr = R.route(wr, xf, moe, rng=_shard_rng(rng, 0),
                      is_training=is_training, token_ids=tok)
         info = R.dispatch_info(rr, E, cap, valid=tv)
-        return _pipeline(info), _routed_aux(rr, info, moe)
+        comm_t = transport.telemetry(E, cap, shape[-1],
+                                     jnp.dtype(xf.dtype).itemsize)
+        return _pipeline(info), _routed_aux(rr, info, moe, comm=comm_t)
 
     def local():
         # ep=1 Gate-Drop: the "local group" is all E experts (mirrors

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import CommEnv, comm_zero, make_transport
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import router as R
 
@@ -159,9 +160,11 @@ def _shard_rng(rng, my_shard):
     return None if rng is None else jax.random.fold_in(rng, my_shard)
 
 
-def _routed_aux(rr, info, moe: MoEConfig) -> Dict[str, jax.Array]:
+def _routed_aux(rr, info, moe: MoEConfig, comm=None) -> Dict[str, jax.Array]:
     """Aux dict for a routed step — shared by every backend so metric
-    semantics cannot desync (DESIGN.md §6)."""
+    semantics cannot desync (DESIGN.md §6). ``comm`` carries the layer's
+    in-graph transport telemetry (DESIGN.md §10); None = no wire (ep=1
+    kernel pipeline before the substrate is consulted)."""
     return {
         "balance": R.balance_loss(rr, moe) if moe.router_type != "hash"
                    else jnp.zeros(()),
@@ -169,6 +172,7 @@ def _routed_aux(rr, info, moe: MoEConfig) -> Dict[str, jax.Array]:
                     else jnp.zeros(()),
         "load": R.expert_load(rr, moe),
         "dropped_frac": 1.0 - info.keep.mean(),
+        **(comm if comm is not None else comm_zero()),
     }
 
 
@@ -194,7 +198,8 @@ def _local_aux(rr, info, moe: MoEConfig, T: int) -> Dict[str, jax.Array]:
     load = jnp.zeros((moe.n_experts,), jnp.float32).at[
         rr.topk_idx.reshape(-1)].add(w, mode="drop")
     return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
-            "load": load, "dropped_frac": 1.0 - info.keep.mean()}
+            "load": load, "dropped_frac": 1.0 - info.keep.mean(),
+            **comm_zero()}
 
 
 def _token_valid_tk(token_valid, k: int):
@@ -207,10 +212,13 @@ def _token_valid_tk(token_valid, k: int):
 
 def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
                   is_training, token_ids, my_shard, ep: int, tp_axis,
-                  a2a_axis, token_valid=None):
-    """Normal MoE step on one shard: route -> dispatch -> (a2a) -> FFN ->
-    (a2a) -> combine. ``token_valid`` masks tokens (retired serving slots)
-    out of capacity competition — they neither dispatch nor combine."""
+                  transport, token_valid=None):
+    """Normal MoE step on one shard: route -> dispatch -> (wire) -> FFN ->
+    (wire) -> combine. The wire is the configured comm substrate
+    (``MoEConfig.comm``, DESIGN.md §10); ``dense`` is bit-for-bit the
+    historical inline all-to-all pair. ``token_valid`` masks tokens
+    (retired serving slots) out of capacity competition — they neither
+    dispatch nor combine."""
     T = xf.shape[0]
     E = moe.n_experts
     cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
@@ -227,16 +235,16 @@ def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
     else:
         tables = None
         buf = R.dispatch(xf, info, E, cap)                   # (E, cap, d)
-    # dispatch all-to-all: (E, cap, d) -> (E/ep, ep*cap, d)
-    buf = jax.lax.all_to_all(buf, a2a_axis, split_axis=0, concat_axis=1,
-                             tiled=True)
+    comm_t = transport.telemetry(E, cap, xf.shape[-1],
+                                 jnp.dtype(buf.dtype).itemsize)
+    # dispatch wire: (E, cap, d) -> (E/ep, ep*cap, d)
+    buf = transport.dispatch(buf)
     out = _expert_ffn(experts, buf, cfg, tp_axis)
-    # combine all-to-all: (E/ep, ep*cap, d) -> (E, cap, d)
-    out = jax.lax.all_to_all(out, a2a_axis, split_axis=1, concat_axis=0,
-                             tiled=True)
+    # combine wire: (E/ep, ep*cap, d) -> (E, cap, d)
+    out = transport.combine(out)
     y = (K.moe_combine_op(out, info, tables=tables) if K.KERNELS_ENABLED
          else R.combine(out, info))
-    return y, _routed_aux(rr, info, moe)
+    return y, _routed_aux(rr, info, moe, comm=comm_t)
 
 
 def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
@@ -266,7 +274,8 @@ def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
 
 def _zero_aux(E: int):
     return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
-            "load": jnp.zeros((E,), jnp.float32), "dropped_frac": jnp.zeros(())}
+            "load": jnp.zeros((E,), jnp.float32),
+            "dropped_frac": jnp.zeros(()), **comm_zero()}
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +305,7 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
         Tl = T // ep
         cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
         cap = min(R.capacity(Tl, E, moe.top_k, cf), Tl)
+        transport = make_transport(moe.comm, CommEnv(ep=ep))
 
         def shard_dispatch(my, xl, tl, tvl):
             rr = R.route(wr, xl, moe, rng=_shard_rng(rng, my),
@@ -308,10 +318,10 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
             shard_dispatch, in_axes=(0, 0, 0 if tok is not None else None,
                                      0 if tv is not None else None))(
             jnp.arange(ep), xs, tok, tv)
-        # virtual all-to-all: (ep, E, cap, d) -> (E, ep*cap, d)
-        gbuf = jnp.transpose(bufs, (1, 0, 2, 3)).reshape(E, ep * cap, -1)
+        # virtual wire (substrate emulation): (ep, E, cap, d) -> (E, ep*cap, d)
+        gbuf = transport.vdispatch(bufs)
         gout = _expert_ffn(experts, gbuf, cfg, None)
-        outs = jnp.transpose(gout.reshape(E, ep, cap, -1), (1, 0, 2, 3))
+        outs = transport.vcombine(gout)
         y = jax.vmap(R.combine)(outs, infos)
         aux = {
             "balance": jax.vmap(lambda r: R.balance_loss(r, moe))(rrs).mean()
@@ -320,6 +330,8 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
                         if moe.router_type != "hash" else jnp.zeros(()),
             "load": jax.vmap(lambda r: R.expert_load(r, moe))(rrs).mean(0),
             "dropped_frac": 1.0 - infos.keep.mean(),
+            **transport.telemetry(E, cap, shape[-1],
+                                  jnp.dtype(x.dtype).itemsize),
         }
         return y.reshape(ep * (T // ep), -1), aux
 
@@ -385,16 +397,21 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
     if ep_on_model:
         ep = ctx.ep * ctx.tp
         tp_axis = None
-        a2a_axis = (ctx.ep_axis, ctx.tp_axis)
+        # the ep group IS the (data x model) axis pair: hierarchical
+        # substrates use those axes as the two tiers (model = intra)
+        env = CommEnv(ep=ep, axis=(ctx.ep_axis, ctx.tp_axis),
+                      inner_axis=ctx.tp_axis, outer_axis=ctx.ep_axis,
+                      inner_size=ctx.tp)
         x_spec = P(dp, ctx.tp_axis, None)
         tok_spec = P(dp, ctx.tp_axis)
     else:
         ep = ctx.ep
         tp_axis = ctx.tp_axis if ctx.tp > 1 else None
-        a2a_axis = ctx.ep_axis
+        env = CommEnv(ep=ep, axis=ctx.ep_axis)
         x_spec = P(dp, None, None)
         tok_spec = P(dp, None)
     assert E % ep == 0, (E, ep)
+    transport = make_transport(moe.comm, env)
 
     # Python-bool / None decisions are baked into the executable (host_cond):
     # the dropped executable contains no all-to-all. Traced decisions are
@@ -416,7 +433,7 @@ def moe_sharded(params: Params, x: jax.Array, cfg: ModelConfig,
 
         def routed():
             return _routed_shard(wr, experts, xf, moe, cfg, rng_, is_training,
-                                 tf, my, ep, tp_axis, a2a_axis,
+                                 tf, my, ep, tp_axis, transport,
                                  token_valid=tvf)
 
         def local():

@@ -205,6 +205,33 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return res
 
 
+def comm_table(arch: str, shape_name: str, *, multi_pod: bool = False,
+               quant: str = "int8") -> Dict[str, Any]:
+    """Per-substrate predicted wire bytes for (arch x shape) on the
+    production mesh — the DESIGN.md §10 what-if table. Pure cost-model
+    math (comm/cost.py): nothing is lowered, compiled, or run."""
+    from repro.comm import format_table, substrate_table
+    cfg = get_config(arch)
+    assert cfg.moe is not None, f"{arch} has no MoE layer to dispatch"
+    shape = INPUT_SHAPES[shape_name]
+    axes = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+            else {"data": 16, "model": 16})
+    dp = axes["data"] * axes.get("pod", 1)     # batch-sharding axes (§4)
+    ep = axes["data"]                          # EP group == data axis
+    tokens = (shape.global_batch if shape.kind == "decode"
+              else shape.global_batch * shape.seq_len)
+    per_shard = max(tokens // dp, 1)
+    table = substrate_table(cfg, tokens_per_shard=per_shard, ep=ep,
+                            is_training=shape.kind == "train",
+                            quant=quant)
+    mesh_name = "pod512" if multi_pod else "pod256"
+    print(f"[comm-table] {arch} x {shape_name} x {mesh_name}: "
+          f"{per_shard} tokens/device, ep={ep}, quant={quant} "
+          f"(per-device FORWARD bytes per step; train backward doubles)")
+    print(format_table(table))
+    return table
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -212,6 +239,13 @@ def main():
     ap.add_argument("--all", action="store_true",
                     help="run every applicable (arch x shape)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--comm-table", action="store_true",
+                    help="print the per-substrate predicted bytes table "
+                         "for --arch x --shape (comm/cost.py; no "
+                         "compile, no step)")
+    ap.add_argument("--comm-quant", default="int8", choices=["int8", "fp8"],
+                    help="wire dtype the --comm-table prices compressed "
+                         "substrates at")
     ap.add_argument("--tag", default="")
     ap.add_argument("--decision", default=None, choices=[None, "routed", "dropped"],
                     help="bake a static gating-dropout decision (host_cond)")
@@ -222,6 +256,11 @@ def main():
                          "(XLA counts scan bodies once)")
     ap.add_argument("--dtype", default=None)
     args = ap.parse_args()
+    if args.comm_table:
+        assert args.arch and args.shape, "--comm-table needs --arch --shape"
+        comm_table(args.arch, args.shape, multi_pod=args.multi_pod,
+                   quant=args.comm_quant)
+        return
     dec = {None: None, "routed": False, "dropped": True}[args.decision]
     overrides = {}
     if args.seq_parallel:

@@ -93,6 +93,33 @@ def _pcts(xs):
     return {p: float(np.percentile(xs, p)) for p in (50, 90, 99)}
 
 
+def trace_comm_section(cfg, gen, sched, ep: int) -> dict:
+    """Price every executed device call of a trace with the substrate
+    bytes model (comm/cost.py, DESIGN.md §10): per-tick wire bytes a
+    sharded deployment at expert-parallel width ``ep`` would move, as
+    totals + percentiles. Decode ticks under ``--local-routing`` move
+    zero bytes (the Gate-Drop local path has no all-to-all)."""
+    from repro.comm import layer_cost
+    from repro.training.steps import n_moe_layers
+    nl = n_moe_layers(cfg)
+    per_tick = []
+    for kind, toks in sched.tick_log:
+        if kind == "decode" and gen.local_routing:
+            per_tick.append(0.0)
+            continue
+        c = layer_cost(cfg, tokens_per_shard=max(toks // ep, 1), ep=ep,
+                       is_training=False)
+        per_tick.append(c["wire_bytes"] * nl)
+    return {
+        "substrate": cfg.moe.comm.substrate,
+        "quant": cfg.moe.comm.quant,
+        "ep_model": ep,
+        "n_ticks": len(per_tick),
+        "wire_bytes_total": float(sum(per_tick)),
+        "wire_bytes_per_tick": _pcts(per_tick) if per_tick else {},
+    }
+
+
 def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
     buckets = tuple(int(b) for b in args.buckets.split(","))
     # trace synthesis draws from the PROMPT stream; key_sample feeds only
@@ -124,6 +151,8 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
         "buckets": list(buckets),
         "local_routing": gen.local_routing,
     }
+    if cfg.moe is not None:
+        rec["comm"] = trace_comm_section(cfg, gen, sched, args.comm_ep)
     return rec
 
 
@@ -148,6 +177,18 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=[None, "auto", "oracle", "sharded", "pallas"],
                     help="MoE execution backend (DESIGN.md §6)")
+    ap.add_argument("--comm", default=None,
+                    choices=[None, "dense", "hierarchical", "compressed",
+                             "hierarchical_compressed"],
+                    help="communication substrate for expert dispatch "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--comm-quant", default=None,
+                    choices=[None, "int8", "fp8"],
+                    help="wire dtype for compressed substrates")
+    ap.add_argument("--comm-ep", type=int, default=1,
+                    help="expert-parallel width the --trace comm "
+                         "accounting prices the wire at (default 1 = "
+                         "this process)")
     ap.add_argument("--local-routing", action="store_true",
                     help="Gate-Drop local routing at decode: MoE tokens "
                          "stay in the local expert group, no all-to-all "
@@ -171,9 +212,14 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if args.backend and cfg.moe is not None:
+    if cfg.moe is not None and (args.backend or args.comm
+                                or args.comm_quant):
+        comm = dataclasses.replace(
+            cfg.moe.comm,
+            substrate=args.comm or cfg.moe.comm.substrate,
+            quant=args.comm_quant or cfg.moe.comm.quant)
         cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
-            cfg.moe, backend=args.backend))
+            cfg.moe, backend=args.backend or cfg.moe.backend, comm=comm))
     # distinct PRNG streams: params / prompts / sampling
     key = jax.random.PRNGKey(args.seed)
     key_params = jax.random.fold_in(key, 0)
@@ -196,6 +242,13 @@ def main():
               + "/".join(f"{rec['per_token_latency_s'][p]*1e3:.2f}"
                          for p in (50, 90, 99)) + " ms")
         print("scheduler:", rec["scheduler"])
+        if "comm" in rec:
+            c = rec["comm"]
+            pt = c["wire_bytes_per_tick"]
+            print(f"comm[{c['substrate']}@ep={c['ep_model']}]: "
+                  f"{c['wire_bytes_total']/2**20:.2f} MiB wire over "
+                  f"{c['n_ticks']} ticks; per-tick KiB p50/p90/p99: "
+                  + "/".join(f"{pt[p]/2**10:.1f}" for p in (50, 90, 99)))
         if args.json_out:
             with open(args.json_out, "w") as f:
                 json.dump(rec, f, indent=1)

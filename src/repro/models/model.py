@@ -31,9 +31,8 @@ from repro.models.transformer import constrain as _constrain
 
 
 def _zero_aux(cfg: ModelConfig):
-    E = cfg.moe.n_experts if cfg.moe is not None else 1
-    return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
-            "load": jnp.zeros((E,), jnp.float32), "dropped_frac": jnp.zeros(())}
+    from repro.core.moe import _zero_aux as moe_zero_aux
+    return moe_zero_aux(cfg.moe.n_experts if cfg.moe is not None else 1)
 
 
 # ---------------------------------------------------------------------------

@@ -217,9 +217,10 @@ def _moe_or_ffn(p: Params, spec: LayerSpec, h: jax.Array, cfg: ModelConfig,
         if "shared" in p:
             y = y + L.ffn_apply(p["shared"], h, cfg)
         return y, aux
-    E = cfg.moe.n_experts if cfg.moe is not None else 1
-    zero = {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
-            "load": jnp.zeros((E,), jnp.float32), "dropped_frac": jnp.zeros(())}
+    # shared zero-aux (core/moe.py) so every branch of every cond keeps
+    # the same aux pytree keys — a locally-maintained copy would desync
+    from repro.core.moe import _zero_aux
+    zero = _zero_aux(cfg.moe.n_experts if cfg.moe is not None else 1)
     if "ffn" in p:
         return L.ffn_apply(p["ffn"], h, cfg), zero
     return jnp.zeros_like(h), zero

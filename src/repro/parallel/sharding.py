@@ -23,6 +23,13 @@ from repro.configs.base import ModelConfig
 from repro.core.moe import ParallelContext
 
 
+# Hierarchical-substrate mesh factorization (DESIGN.md §10): the ep
+# group's tier structure and the axis_index_groups for its two hops live
+# next to the rest of the partitioning rules. (Defined in comm/cost.py —
+# the analytic bytes model consumes them too — and re-exported here.)
+from repro.comm.cost import ep_tier_groups, factored_ep  # noqa: E402,F401
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1

@@ -182,6 +182,10 @@ class ContinuousScheduler:
         self.stats = {"admitted": 0, "finished": 0, "prefill_calls": 0,
                       "decode_steps": 0, "max_concurrent": 0,
                       "slot_reuse": 0}
+        # (kind, tokens) per executed device call, in order — the comm
+        # accounting feed: launch/serve.py --trace prices each tick with
+        # the substrate bytes model (comm/cost.py, DESIGN.md §10)
+        self.tick_log: List[Tuple[str, int]] = []
         self._slot_uses = np.zeros(n_slots, np.int64)
         self._prefill = _bucket_prefill_fn(cfg, gen, ctx, self.max_seq)
         self._decode_fn = _pool_decode_fn(cfg, gen, ctx)
@@ -331,6 +335,7 @@ class ContinuousScheduler:
                                        first_token_at=t_first)
             self.stats["admitted"] += 1
         self.stats["prefill_calls"] += 1
+        self.tick_log.append(("prefill", W * bucket))
         self.stats["max_concurrent"] = max(
             self.stats["max_concurrent"],
             int(self._active[:self.n_slots].sum()))
@@ -359,6 +364,7 @@ class ContinuousScheduler:
                                              int(self._ngen[s]),
                                              int(self._budget[s]))
         self.stats["decode_steps"] += 1
+        self.tick_log.append(("decode", self.n_slots + 1))
 
     # -- driving loop -------------------------------------------------------
 

@@ -253,6 +253,13 @@ class Trainer:
                            "time_s": el}
                     if "balance" in ms:
                         rec["balance"] = float(ms["balance"][j])
+                    if "comm_wire_bytes" in ms:
+                        # per-device wire bytes this step's forward moved
+                        # (in-graph substrate telemetry, DESIGN.md §10)
+                        rec["comm_wire_bytes"] = float(
+                            ms["comm_wire_bytes"][j])
+                        rec["comm_a2a_calls"] = float(
+                            ms["comm_a2a_calls"][j])
                     if i in eval_steps:   # schedule guarantees i == e - 1
                         rec.update(self.eval_fn(self.state, i))
                     self.history.append(rec)

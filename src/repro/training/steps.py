@@ -117,9 +117,17 @@ def total_loss(params, batch, cfg: ModelConfig, ctx, *, rng, decision,
         bal = aux["balance"] / nmoe
         zl = aux["router_z"] / nmoe
         loss = loss + cfg.moe.balance_coef * bal + cfg.moe.router_z_coef * zl
+        # comm_* are the substrate's in-graph transport counters
+        # (DESIGN.md §10) summed over all MoE layers of THIS forward:
+        # all-to-all ops, payload bytes, and per-device wire bytes the
+        # step's forward pass moved (0 on Gate-Drop/local steps; the
+        # backward pass doubles the wire, see comm/cost.py::step_cost)
         metrics.update(balance=bal, router_z=zl,
                        expert_load=aux["load"] / nmoe,
-                       dropped_frac=aux["dropped_frac"] / nmoe)
+                       dropped_frac=aux["dropped_frac"] / nmoe,
+                       comm_a2a_calls=aux["comm_a2a_calls"],
+                       comm_bytes=aux["comm_bytes"],
+                       comm_wire_bytes=aux["comm_wire_bytes"])
     if cfg.mtp and is_training and "mtp_hidden" in aux:
         labels2 = jnp.roll(labels, -1, axis=1)
         m2 = (mask if mask is not None else jnp.ones_like(labels, jnp.float32))

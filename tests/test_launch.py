@@ -84,3 +84,37 @@ def test_serve_cli_trace_smoke_json(tmp_path):
         assert np.isfinite(rec["per_token_latency_s"][p])
     # mid-flight admission: 6 requests through 2 slots -> slots reused
     assert rec["scheduler"]["slot_reuse"] >= 4
+
+
+def test_serve_cli_trace_comm_accounting(tmp_path):
+    """MoE arch + --comm: the trace record prices every executed tick
+    with the substrate bytes model (DESIGN.md §10) at --comm-ep."""
+    out_json = str(tmp_path / "serve_comm.json")
+    stdout = run_module(["--arch", "dbrx-132b", "--reduced", "--trace", "4",
+                         "--rate", "500", "--slots", "2", "--max-new", "4",
+                         "--buckets", "8", "--eos", "-1",
+                         "--comm", "compressed", "--comm-ep", "8",
+                         "--json-out", out_json],
+                        module="repro.launch.serve")
+    with open(out_json) as f:
+        rec = json.load(f)
+    comm = rec["comm"]
+    assert comm["substrate"] == "compressed"
+    assert comm["ep_model"] == 8
+    assert comm["wire_bytes_total"] > 0
+    assert comm["n_ticks"] == (rec["scheduler"]["prefill_calls"]
+                               + rec["scheduler"]["decode_steps"])
+    for p in ("50", "90", "99"):
+        assert np.isfinite(comm["wire_bytes_per_tick"][p])
+    assert "comm[compressed@ep=8]" in stdout
+
+
+def test_dryrun_comm_table_cli():
+    """--comm-table prints the per-substrate predicted bytes table with
+    no lowering/compiling — must return in seconds."""
+    stdout = run_module(["--comm-table", "--arch", "zcode-m3-base",
+                         "--shape", "train_4k"],
+                        module="repro.launch.dryrun", timeout=180)
+    for name in ("dense", "hierarchical", "compressed",
+                 "hierarchical_compressed", "vs dense"):
+        assert name in stdout, stdout
