@@ -158,12 +158,55 @@ def markdown_table(analyses: List[Dict]) -> str:
     return hdr + "\n".join(rows)
 
 
+def gate() -> int:
+    """CI acceptance gate for the fused MoE megakernel (DESIGN.md §11).
+
+    Reads the committed table5 artifact and fails (nonzero) unless the
+    ``pallas_fused`` backend is strictly faster than the unfused pallas
+    pipeline AND launches at most half as many pallas kernels per layer.
+    """
+    path = os.path.join(ART, "table5_backends.json")
+    if not os.path.exists(path):
+        print(f"GATE FAIL: missing artifact {path} "
+              "(run benchmarks.table5_backends first)")
+        return 1
+    with open(path) as f:
+        res = json.load(f)
+    try:
+        fused = res["backends"]["pallas_fused"]
+        pallas = res["backends"]["pallas"]
+    except KeyError as e:
+        print(f"GATE FAIL: artifact missing backend entry {e}")
+        return 1
+    ok = True
+    if not fused["t_layer_us"] < pallas["t_layer_us"]:
+        print(f"GATE FAIL: fused {fused['t_layer_us']:.1f} us/layer not "
+              f"faster than pallas {pallas['t_layer_us']:.1f} us/layer")
+        ok = False
+    if not fused["pallas_launches"] * 2 <= pallas["pallas_launches"]:
+        print(f"GATE FAIL: fused launches {fused['pallas_launches']} not "
+              f"<= half of pallas {pallas['pallas_launches']}")
+        ok = False
+    if ok:
+        speedup = pallas["t_layer_us"] / fused["t_layer_us"]
+        print(f"GATE OK: fused {fused['t_layer_us']:.1f} us/layer vs "
+              f"pallas {pallas['t_layer_us']:.1f} us/layer "
+              f"({speedup:.2f}x), launches "
+              f"{fused['pallas_launches']} vs {pallas['pallas_launches']}")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod256")
     ap.add_argument("--tag", default=None)
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--gate", action="store_true",
+                    help="megakernel acceptance gate over the table5 "
+                         "artifact (exit 1 on regression)")
     args = ap.parse_args()
+    if args.gate:
+        raise SystemExit(gate())
     if args.tag is None:
         recs = load_joined(args.mesh)
     else:

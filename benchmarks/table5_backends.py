@@ -8,11 +8,19 @@ interpret mode), so the numbers rank *relative* per-phase cost and prove
 the pipeline works end-to-end; on a real TPU pod the same script compares
 compiled-kernel against XLA-collective execution.
 
+The ``pallas_fused`` megakernel backend (DESIGN.md §11) replaces the
+dispatch -> grouped-FFN -> combine pipeline with ONE pallas_call; the
+per-backend ``pallas_launches`` count (pallas_call occurrences in the
+jaxpr of one layer forward) is the structural evidence, and
+``benchmarks.roofline --gate`` enforces both it and the latency win.
+
 Output: benchmarks/artifacts/table5_backends.json
 
-  {"shape": {...}, "backends": {"<name>": {"t_layer_us": float}},
+  {"shape": {...},
+   "backends": {"<name>": {"t_layer_us": float, "pallas_launches": int}},
    "pallas_phases": {"routing_tables_us": ..., "dispatch_us": ...,
-                     "ffn_us": ..., "combine_us": ...}}
+                     "ffn_us": ..., "combine_us": ...,
+                     "fused_moe_us": ...}}
 """
 from __future__ import annotations
 
@@ -46,15 +54,20 @@ def main(fast: bool = True):
                      "top_k": moe.top_k, "d_ff_expert": moe.d_ff(cfg.d_ff)},
            "backends": {}, "pallas_phases": {}}
 
-    for name in ("oracle", "pallas", "sharded"):
+    for name in ("oracle", "pallas", "pallas_fused", "sharded"):
         fn = get_backend(name)
         step = jax.jit(lambda p_, x_: fn(p_, x_, cfg, None, rng=None,
                                          decision=False, is_training=True,
                                          token_ids=None)[0])
         t = timeit(step, p, x, warmup=2, iters=5)
-        res["backends"][name] = {"t_layer_us": t * 1e6}
+        # structural launch count: pallas_call occurrences in the layer
+        # jaxpr (fused = 1, pipeline = dispatch + 2x gmm + combine)
+        launches = str(jax.make_jaxpr(step)(p, x)).count("pallas_call")
+        res["backends"][name] = {"t_layer_us": t * 1e6,
+                                 "pallas_launches": launches}
         csv_row(f"table5/{name}/layer_fwd", t * 1e6,
-                f"E={moe.n_experts};k={moe.top_k};tokens={B*L}")
+                f"E={moe.n_experts};k={moe.top_k};tokens={B*L};"
+                f"launches={launches}")
 
     # pallas phase breakdown: routing tables / dispatch / grouped FFN / combine
     xf = x.reshape(-1, cfg.d_model)
@@ -79,6 +92,12 @@ def main(fast: bool = True):
         "combine_us": timeit(
             lambda: K.combine(out.reshape(E * cap, -1), tables.token_slot,
                               info.topk_w, info.keep)) * 1e6,
+        # the megakernel does all three phases above in one launch
+        "fused_moe_us": timeit(
+            lambda: K.fused_moe_op(xf, info, p["experts"]["w_in"],
+                                   p["experts"].get("w_gate"),
+                                   p["experts"]["w_out"], E, cap, cfg.act,
+                                   tables=tables)) * 1e6,
     }
     res["pallas_phases"] = phases
     for k, v in phases.items():

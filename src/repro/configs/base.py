@@ -119,15 +119,15 @@ class MoEConfig:
                                         # data x model (a2a bytes / tp; no TP
                                         # inside experts). Needs E % (dp*tp)==0.
     # Execution backend (core/backend.py registry, DESIGN.md §6):
-    #   auto | oracle | sharded | pallas
+    #   auto | oracle | sharded | pallas | pallas_fused (megakernel, §11)
     backend: str = "auto"
     # Collective-communication substrate for dispatch/combine (DESIGN.md §10)
     comm: CommConfig = field(default_factory=CommConfig)
     gating_dropout: GatingDropoutConfig = field(default_factory=GatingDropoutConfig)
 
     def __post_init__(self):
-        assert self.backend in ("auto", "oracle", "sharded", "pallas"), \
-            self.backend
+        assert self.backend in ("auto", "oracle", "sharded", "pallas",
+                                "pallas_fused"), self.backend
 
     def d_ff(self, model_d_ff: int) -> int:
         return self.d_ff_expert or model_d_ff

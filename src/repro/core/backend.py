@@ -175,3 +175,81 @@ def pallas_backend(params: Params, x: jax.Array, cfg: ModelConfig, ctx=None,
 
     y, aux = _select_branch(moe, decision, routed, local, expert_drop)
     return y.reshape(shape), aux
+
+
+@register_backend("pallas_fused")
+def pallas_fused_backend(params: Params, x: jax.Array, cfg: ModelConfig,
+                         ctx=None, *, rng: Optional[jax.Array] = None,
+                         decision=None, is_training: bool = True,
+                         token_ids: Optional[jax.Array] = None,
+                         token_valid: Optional[jax.Array] = None,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[jax.Array, Dict]:
+    """ONE-launch megakernel pipeline (kernels.moe_megakernel, DESIGN.md
+    §11): route -> fused gather + expert FFN + weighted scatter. Same
+    router, same Gating Dropout branches, same aux as `pallas` — the
+    (E, C, d) buffer and its two extra HBM roundtrips are gone, and the
+    five per-layer kernel launches collapse to one.
+
+    Falls back to the unfused `pallas` path when a real mesh is active
+    (expert parallelism needs the materialized buffer on the wire) or when
+    the comm substrate is compressed (the quant->dequant payload transform
+    applies to that buffer); ep=1 dense/hierarchical wires are identity,
+    so skipping them changes nothing (DESIGN.md §10)."""
+    from repro.core.moe import (_local_adjust, _local_aux, _routed_aux,
+                                _select_branch, _shard_rng, _zero_aux)
+    from repro.kernels import ops as K
+
+    moe = cfg.moe
+    if (ctx is not None and ctx.active) or moe.comm.compressed:
+        return pallas_backend(params, x, cfg, ctx, rng=rng, decision=decision,
+                              is_training=is_training, token_ids=token_ids,
+                              token_valid=token_valid, interpret=interpret)
+
+    from repro.comm import CommEnv, make_transport
+
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    T = xf.shape[0]
+    E = moe.n_experts
+    tok = None if token_ids is None else token_ids.reshape(-1)
+    tv = (None if token_valid is None
+          else jnp.broadcast_to(token_valid.reshape(-1, 1), (T, moe.top_k)))
+    wr = params["router"]["w"]
+    experts = params["experts"]
+    cf = moe.capacity_factor if is_training else moe.eval_capacity_factor
+    cap = min(R.capacity(T, E, moe.top_k, cf), T)
+    # telemetry priced identically to `pallas` (ep=1 wire) so the aux dict
+    # is backend-invariant; the identity roundtrip itself is fused away
+    transport = make_transport(moe.comm, CommEnv(ep=1))
+
+    def _pipeline(info: R.DispatchInfo) -> jax.Array:
+        tables = K.routing_tables(info, E, cap)
+        return K.fused_moe_op(xf, info, experts["w_in"],
+                              experts.get("w_gate"), experts["w_out"],
+                              E, cap, cfg.act, interpret=interpret,
+                              tables=tables)
+
+    def routed():
+        rr = R.route(wr, xf, moe, rng=_shard_rng(rng, 0),
+                     is_training=is_training, token_ids=tok)
+        info = R.dispatch_info(rr, E, cap, valid=tv)
+        comm_t = transport.telemetry(E, cap, shape[-1],
+                                     jnp.dtype(xf.dtype).itemsize)
+        return _pipeline(info), _routed_aux(rr, info, moe, comm=comm_t)
+
+    def local():
+        rr = R.route(wr, xf, moe, rng=_shard_rng(rng, 0),
+                     is_training=is_training, token_ids=tok,
+                     expert_lo=0, n_local=E)
+        rr, valid = _local_adjust(rr, moe, 0, E)
+        if tv is not None:
+            valid = valid & tv
+        info = R.dispatch_info(rr, E, cap, valid=valid)
+        return _pipeline(info), _local_aux(rr, info, moe, T)
+
+    def expert_drop():
+        return jnp.zeros((T, shape[-1]), x.dtype), _zero_aux(E)
+
+    y, aux = _select_branch(moe, decision, routed, local, expert_drop)
+    return y.reshape(shape), aux

@@ -9,9 +9,10 @@ from repro.kernels import ops, ref
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.grouped_ffn import grouped_matmul
 from repro.kernels.moe_dispatch import combine, dispatch
+from repro.kernels.moe_megakernel import fused_moe_ffn
 from repro.kernels.platform import (default_interpret, force_interpret,
                                     resolve_interpret)
 
 __all__ = ["combine", "default_interpret", "dispatch", "flash_decode",
-           "force_interpret", "grouped_matmul", "ops", "ref",
-           "resolve_interpret"]
+           "force_interpret", "fused_moe_ffn", "grouped_matmul", "ops",
+           "ref", "resolve_interpret"]

@@ -23,6 +23,7 @@ NEG_INF = -1e30
 
 def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             bs: int, scale: float):
+    bi = pl.program_id(0)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -36,7 +37,7 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     v = v_ref[0, :, 0, :].astype(jnp.float32)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (rep, bs)
     pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    s = jnp.where(pos <= idx_ref[0], s, NEG_INF)
+    s = jnp.where(pos <= idx_ref[bi], s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))     # (rep, 1)
     p = jnp.exp(s - m_new)
@@ -80,15 +81,18 @@ def _flash_decode_jit(q, k, v, index, bs, interpret):
         ),
         out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(index, jnp.int32).reshape(1), qg, k, v)
+    )(jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (b,)),
+      qg, k, v)
     return out.reshape(b, h, hd)
 
 
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, index: jax.Array,
                  *, bs: int = 512,
                  interpret: Optional[bool] = None) -> jax.Array:
-    """q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar int32 (positions
-    > index are masked). Returns (B, H, hd). interpret=None -> platform
+    """q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar int32 OR (B,) —
+    positions > index (per row) are masked; the per-row form serves the
+    slot-pool decode path where every request sits at its own depth
+    (DESIGN.md §9). Returns (B, H, hd). interpret=None -> platform
     (resolved before the jit boundary so the cached executable is keyed on
     the concrete mode)."""
     return _flash_decode_jit(q, k, v, index, bs, resolve_interpret(interpret))

@@ -19,6 +19,7 @@ from repro.core.router import DispatchInfo
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.grouped_ffn import grouped_matmul
 from repro.kernels.moe_dispatch import combine, dispatch
+from repro.kernels.moe_megakernel import fused_moe_ffn
 from repro.kernels.platform import (default_interpret, force_interpret,
                                     resolve_interpret)
 
@@ -100,6 +101,22 @@ def moe_combine_op(buf: jax.Array, info: DispatchInfo, *,
                    info.keep, interpret=interpret)
 
 
+def fused_moe_op(x: jax.Array, info: DispatchInfo, w_in: jax.Array, w_gate,
+                 w_out: jax.Array, n_experts: int, cap: int,
+                 act: str = "silu", *, interpret: Optional[bool] = None,
+                 tables: Optional[RoutingTables] = None) -> jax.Array:
+    """ONE-launch fused equivalent of dispatch -> expert_ffn_op -> combine
+    (kernels.moe_megakernel, DESIGN.md §11): (T, d) -> (T, d) without ever
+    materializing the (E, C, d) buffer in HBM. ``tables`` drive the
+    in-kernel gather/scatter and the custom VJP's slot-formulation
+    backward."""
+    if tables is None:
+        tables = routing_tables(info, n_experts, cap)
+    return fused_moe_ffn(x, w_in, w_gate, w_out, info.topk_w,
+                         info.keep, tables.slot_token, tables.slot_valid,
+                         tables.token_slot, act=act, interpret=interpret)
+
+
 def expert_ffn_op(buf: jax.Array, w_in: jax.Array, w_gate, w_out: jax.Array,
                   act: str = "silu", *,
                   interpret: Optional[bool] = None) -> jax.Array:
@@ -116,5 +133,6 @@ def expert_ffn_op(buf: jax.Array, w_in: jax.Array, w_gate, w_out: jax.Array,
 
 __all__ = ["RoutingTables", "build_slot_maps", "combine", "default_interpret",
            "dispatch", "expert_ffn_op", "flash_decode", "force_interpret",
-           "grouped_matmul", "moe_combine_op", "moe_dispatch_op",
-           "resolve_interpret", "routing_tables"]
+           "fused_moe_ffn", "fused_moe_op", "grouped_matmul",
+           "moe_combine_op", "moe_dispatch_op", "resolve_interpret",
+           "routing_tables"]

@@ -40,8 +40,8 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      index: jax.Array) -> jax.Array:
     """Single-token decode attention.
 
-    q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar — positions > index
-    masked out. Returns (B, H, hd).
+    q: (B, H, hd); k, v: (B, S, KV, hd); index: scalar or (B,) — positions
+    > index (per row) masked out. Returns (B, H, hd).
     """
     b, h, hd = q.shape
     s, kv = k.shape[1], k.shape[2]
@@ -50,8 +50,9 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     ve = jnp.repeat(v, rep, axis=2)
     logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
                         ke.astype(jnp.float32)) * (hd ** -0.5)
-    valid = jnp.arange(s) <= index
-    logits = jnp.where(valid[None, None, :], logits, -1e30)
+    idx = jnp.broadcast_to(jnp.asarray(index).reshape(-1), (b,))
+    valid = jnp.arange(s)[None, :] <= idx[:, None]             # (B, S)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhs,bshd->bhd", p,
                       ve.astype(jnp.float32)).astype(q.dtype)

@@ -175,8 +175,9 @@ def main():
                          "max-new tokens unconditionally); default matches "
                          "GenerateConfig.eos_id")
     ap.add_argument("--backend", default=None,
-                    choices=[None, "auto", "oracle", "sharded", "pallas"],
-                    help="MoE execution backend (DESIGN.md §6)")
+                    choices=[None, "auto", "oracle", "sharded", "pallas",
+                             "pallas_fused"],
+                    help="MoE execution backend (DESIGN.md §6, §11)")
     ap.add_argument("--comm", default=None,
                     choices=[None, "dense", "hierarchical", "compressed",
                              "hierarchical_compressed"],
@@ -193,6 +194,10 @@ def main():
                     help="Gate-Drop local routing at decode: MoE tokens "
                          "stay in the local expert group, no all-to-all "
                          "in the decode executable (DESIGN.md §9)")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="route full-cache decode attention through the "
+                         "kernels.flash_decode Pallas kernel (DESIGN.md "
+                         "§11; ring/window caches keep the reference path)")
     # continuous batching
     ap.add_argument("--trace", type=int, default=0,
                     help="N>0: serve N synthetic Poisson-arrival requests "
@@ -229,7 +234,8 @@ def main():
 
     gen = GenerateConfig(max_new=args.max_new, temperature=args.temperature,
                          top_k=args.top_k, beam_width=args.beam,
-                         eos_id=args.eos, local_routing=args.local_routing)
+                         eos_id=args.eos, local_routing=args.local_routing,
+                         flash_decode=args.flash_decode)
 
     if args.trace > 0:
         rec = run_trace(args, cfg, params, gen, key_prompts, key_sample)

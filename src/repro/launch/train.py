@@ -97,8 +97,9 @@ def main():
     ap.add_argument("--router", default=None,
                     choices=[None, "softmax", "sigmoid", "hash"])
     ap.add_argument("--backend", default=None,
-                    choices=[None, "auto", "oracle", "sharded", "pallas"],
-                    help="MoE execution backend (DESIGN.md §6)")
+                    choices=[None, "auto", "oracle", "sharded", "pallas",
+                             "pallas_fused"],
+                    help="MoE execution backend (DESIGN.md §6, §11)")
     ap.add_argument("--comm", default=None,
                     choices=[None, "dense", "hierarchical", "compressed",
                              "hierarchical_compressed"],

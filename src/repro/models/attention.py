@@ -152,8 +152,8 @@ def init_ring_cache(cfg: ModelConfig, batch: int, window: int,
 
 def decode_self_attention(p: Params, x: jax.Array, cache: Params,
                           cfg: ModelConfig, index: jax.Array, *,
-                          window: int = 0, use_rope: bool = True
-                          ) -> Tuple[jax.Array, Params]:
+                          window: int = 0, use_rope: bool = True,
+                          flash: bool = False) -> Tuple[jax.Array, Params]:
     """One-token decode. x: (B, 1, d); ``index`` = absolute position of the
     new token — a scalar (all rows at the same position) or a (B,) vector
     (slot-pool decode: every row at its own position). Ring-buffer cache
@@ -161,7 +161,15 @@ def decode_self_attention(p: Params, x: jax.Array, cache: Params,
     `index`. The per-row path requires the ring ``pos`` leaf batched to
     (B, window) (``repro.serve.engine.init_slot_pool`` builds such caches);
     masks are identical in value to the scalar path, so the two paths emit
-    bitwise-equal outputs when every row shares one position."""
+    bitwise-equal outputs when every row shares one position.
+
+    ``flash=True`` routes the FULL-cache read through the
+    ``kernels.flash_decode`` online-softmax kernel (per-row index
+    supported) — the position mask ``pos <= index`` is the same predicate
+    as the reference path's ``kv_valid``, so unwritten cache rows beyond
+    each row's depth never contribute. Ring-buffer (windowed) layers keep
+    the reference path: their validity depends on the ``pos`` leaf, not a
+    prefix mask."""
     index = jnp.asarray(index)
     per_row = index.ndim == 1
     b = x.shape[0]
@@ -200,16 +208,24 @@ def decode_self_attention(p: Params, x: jax.Array, cache: Params,
         if per_row:
             ck = cache["k"].at[rows, index].set(k[:, 0])
             cv = cache["v"].at[rows, index].set(v[:, 0])
-            valid = jnp.arange(s)[None, :] <= index[:, None]
-            o = full_attention(q, ck, cv, causal=False, kv_valid=valid)
+            if flash:
+                from repro.kernels import flash_decode
+                o = flash_decode(q[:, 0], ck, cv, index)[:, None]
+            else:
+                valid = jnp.arange(s)[None, :] <= index[:, None]
+                o = full_attention(q, ck, cv, causal=False, kv_valid=valid)
         else:
             ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, index, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, index, 0, 0))
-            kpos = jnp.arange(s)
-            valid = kpos <= index
-            o = full_attention(q, ck, cv, causal=False,
-                               qpos=jnp.asarray(index)[None],
-                               kpos=kpos, kv_valid=valid)
+            if flash:
+                from repro.kernels import flash_decode
+                o = flash_decode(q[:, 0], ck, cv, index)[:, None]
+            else:
+                kpos = jnp.arange(s)
+                valid = kpos <= index
+                o = full_attention(q, ck, cv, causal=False,
+                                   qpos=jnp.asarray(index)[None],
+                                   kpos=kpos, kv_valid=valid)
         new_cache = {"k": ck, "v": cv}
     return attn_out(p, o, x.dtype), new_cache
 

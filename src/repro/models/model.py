@@ -248,7 +248,8 @@ def decode_step(params: Params, caches: List[Params], token: jax.Array,
                 ctx: Optional[ParallelContext] = None, *,
                 rng: Optional[jax.Array] = None,
                 local_routing: bool = False,
-                token_valid: Optional[jax.Array] = None
+                token_valid: Optional[jax.Array] = None,
+                flash_decode: bool = False
                 ) -> Tuple[jax.Array, List[Params]]:
     """token: (B, 1) int32; index: absolute position of this token — scalar,
     or (B,) for slot-pool decode where every row sits at its own position.
@@ -257,7 +258,8 @@ def decode_step(params: Params, caches: List[Params], token: jax.Array,
     decision: MoE tokens route within the local expert group only, so the
     sharded backend's decode executable contains no all-to-all (DESIGN.md
     §9). ``token_valid`` (B,) masks rows (retired/empty pool slots) out of
-    expert-capacity competition."""
+    expert-capacity competition. ``flash_decode=True`` routes full-cache
+    attention reads through the kernels.flash_decode Pallas kernel."""
     segs = T.layer_plan(cfg)
     x = L.embed_apply(params["embed"], token).astype(cfg.dtype)
     n_meta = cfg.hybrid.n_meta_tokens if cfg.hybrid is not None else 0
@@ -268,6 +270,7 @@ def decode_step(params: Params, caches: List[Params], token: jax.Array,
                                  mode="decode", caches=caches, index=idx,
                                  rng=rng, decision=bool(local_routing),
                                  is_training=False, token_ids=token,
-                                 token_valid=token_valid)
+                                 token_valid=token_valid,
+                                 flash_decode=flash_decode)
     x = L.norm_apply(params["final_norm"], x, cfg)
     return _logits(params, x, cfg, ctx), caches

@@ -230,7 +230,9 @@ def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
                  ctx, *, mode: str, cache: Optional[Params],
                  index, rng, decision, is_training: bool,
                  cross_src: Optional[jax.Array], token_ids,
-                 token_valid=None) -> Tuple[jax.Array, Optional[Params], Dict]:
+                 token_valid=None,
+                 flash_decode: bool = False) -> Tuple[jax.Array,
+                                                      Optional[Params], Dict]:
     """One transformer layer. Returns (x, new_cache, aux)."""
     new_cache: Params = {}
     b, l, d = x.shape
@@ -242,7 +244,7 @@ def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
             if mode == "decode":
                 o, nc = A.decode_self_attention(
                     p["attn"], h, cache["attn"], cfg, index,
-                    window=spec.window)
+                    window=spec.window, flash=flash_decode)
                 new_cache["attn"] = nc
             else:
                 q, k, v = A.attn_qkv(p["attn"], h)
@@ -418,7 +420,8 @@ def apply_stack(params: List[Params], segs: List[Segment], x: jax.Array,
                 cfg: ModelConfig, ctx, *, mode: str,
                 caches: Optional[List[Params]] = None,
                 index=None, rng=None, decision=None, is_training=True,
-                cross_src=None, token_ids=None, token_valid=None):
+                cross_src=None, token_ids=None, token_valid=None,
+                flash_decode=False):
     """Run all segments. Returns (x, new_caches, aux_sum)."""
     new_caches: List[Params] = []
     aux_total = None
@@ -439,7 +442,8 @@ def apply_stack(params: List[Params], segs: List[Segment], x: jax.Array,
                     cache=None if slice_c is None else slice_c[f"p{pi}"],
                     index=index, rng=lrng, decision=decision,
                     is_training=is_training, cross_src=cross_src,
-                    token_ids=token_ids, token_valid=token_valid)
+                    token_ids=token_ids, token_valid=token_valid,
+                    flash_decode=flash_decode)
                 if nc is not None:
                     nc_out[f"p{pi}"] = nc
                 aux_acc = aux if aux_acc is None else jax.tree.map(

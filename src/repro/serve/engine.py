@@ -81,6 +81,9 @@ class GenerateConfig:
     time (DESIGN.md §9): MoE tokens route within the local expert group
     only, so the sharded backend's decode executable carries no
     all-to-all — the same communication the paper drops in training.
+    ``flash_decode`` routes every full-cache attention read through the
+    ``kernels.flash_decode`` online-softmax Pallas kernel (per-row
+    positions supported; ring/window caches keep the reference path).
     """
     max_new: int = 32
     temperature: float = 0.0
@@ -91,6 +94,7 @@ class GenerateConfig:
     length_penalty: float = 1.0     # beam score norm: score / len**penalty
     early_exit: bool = True         # stop the loop when every row is done
     local_routing: bool = False     # Gate-Drop local path at decode (§9)
+    flash_decode: bool = False      # decode attention via Pallas kernel
     max_seq: int = 0                # cache length override (0 = prompt_len
                                     # + max_new). Set to a slot pool's
                                     # max_seq to compare one-shot outputs
@@ -243,7 +247,8 @@ def prefill_into_slots(params, batch: Dict[str, Any], lengths: jax.Array,
 def decode_pool_step(params, pool, tok: jax.Array, pos: jax.Array,
                      alive: jax.Array, cfg: ModelConfig,
                      ctx: Optional[ParallelContext] = None, *,
-                     local_routing: bool = False):
+                     local_routing: bool = False,
+                     flash_decode: bool = False):
     """One batched ``decode_step`` over ALL pool slots at per-slot
     positions. ``tok``/``pos``/``alive`` are (S,): the token each slot
     feeds, its absolute position, and whether the slot is live (active
@@ -253,7 +258,8 @@ def decode_pool_step(params, pool, tok: jax.Array, pos: jax.Array,
     Returns ``(logits (S, V), pool')``. This is the ONE decode executable
     of a serving process — compile count O(prefill buckets + 1)."""
     lg, pool = decode_step(params, pool, tok[:, None], pos, cfg, ctx,
-                           local_routing=local_routing, token_valid=alive)
+                           local_routing=local_routing, token_valid=alive,
+                           flash_decode=flash_decode)
     return lg[:, 0], pool
 
 
@@ -334,7 +340,8 @@ def _generate_sample(params, batch, rng, cfg: ModelConfig,
     def body(state):
         i, cur, pos, pool, buf, done, length, score = state
         lg, pool = decode_pool_step(params, pool, cur, pos, ~done, cfg, ctx,
-                                    local_routing=gen.local_routing)
+                                    local_routing=gen.local_routing,
+                                    flash_decode=gen.flash_decode)
         nxt, lp = _select_rows(gen, lg.astype(jnp.float32), rng, seeds,
                                jnp.full((b,), i, jnp.int32))
         nxt, done, length, score = _advance(gen, nxt, lp, done, length,
@@ -391,7 +398,8 @@ def _generate_beam(params, batch, rng, cfg: ModelConfig,
         i, cur, caches, buf, scores, done, length = state
         lg, caches = decode_step(params, caches, cur.reshape(b * W, 1),
                                  prompt_len + i - 1, cfg, ctx,
-                                 local_routing=gen.local_routing)
+                                 local_routing=gen.local_routing,
+                                 flash_decode=gen.flash_decode)
         logp = jax.nn.log_softmax(lg[:, 0].astype(jnp.float32), -1)
         logp = logp.reshape(b, W, V)
         logp = jnp.where(done[..., None], frozen[None, None], logp)

@@ -96,7 +96,8 @@ def _pool_decode_fn(cfg: ModelConfig, gen: GenerateConfig, ctx):
     @jax.jit
     def step(params, pool, tok, pos, alive, rng, seeds, steps):
         lg, pool = decode_pool_step(params, pool, tok, pos, alive, cfg,
-                                    ctx, local_routing=gen.local_routing)
+                                    ctx, local_routing=gen.local_routing,
+                                    flash_decode=gen.flash_decode)
         nxt, lp = _select_rows(gen, lg.astype(jnp.float32), rng, seeds,
                                steps)
         return pool, nxt, lp

@@ -8,6 +8,8 @@ from repro.configs.base import MoEConfig
 from repro.core import router as R
 from repro.kernels import flash_decode, grouped_matmul, ops, ref
 
+pytestmark = pytest.mark.kernels
+
 KEY = jax.random.PRNGKey(0)
 
 

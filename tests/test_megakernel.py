@@ -1,0 +1,266 @@
+"""Differential kernel-testing layer for the fused MoE megakernel
+(DESIGN.md §11): seeded parity sweeps against the pure-jnp oracle
+pipeline, degenerate-case coverage, finite-difference gradient checks for
+every custom-VJP kernel, and the token_valid slot-masking regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.test_util import check_grads
+
+from repro.configs import get_config, reduced
+from repro.configs.base import MoEConfig
+from repro.core import get_backend, init_moe_params
+from repro.core import router as R
+from repro.kernels import combine, dispatch, grouped_matmul, ops, ref
+from repro.kernels.moe_megakernel import fused_moe_ffn
+
+pytestmark = pytest.mark.kernels
+
+KEY = jax.random.PRNGKey(0)
+
+
+def oracle_moe(x, info, w_in, w_gate, w_out, E, cap, act="silu"):
+    """The unfused reference: router dispatch -> einsum FFN -> combine."""
+    buf = R.dispatch(x, info, E, cap)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    if w_gate is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        h = actf(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = actf(h.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("ecf,efd->ecd", h, w_out)
+    return R.combine(out, info)
+
+
+def make_case(E, k, cap, T, d, f, dtype=jnp.float32, gated=True, seed=0):
+    moe = MoEConfig(n_experts=E, top_k=k, jitter_eps=0.0)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (T, d), dtype)
+    wr = jax.random.normal(ks[1], (d, E))
+    w_in = (jax.random.normal(ks[2], (E, d, f)) * 0.1).astype(dtype)
+    w_gate = ((jax.random.normal(ks[3], (E, d, f)) * 0.1).astype(dtype)
+              if gated else None)
+    w_out = (jax.random.normal(ks[4], (E, f, d)) * 0.1).astype(dtype)
+    rr = R.route(wr, x.astype(jnp.float32), moe, is_training=False)
+    info = R.dispatch_info(rr, E, cap)
+    return x, info, w_in, w_gate, w_out
+
+
+# ---------------------------------------------------------------------------
+# forward parity sweep (incl. degenerate shapes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,k,cap,T,d,f", [
+    (4, 2, 16, 64, 32, 48),
+    (8, 1, 8, 64, 16, 32),      # k=1
+    (2, 2, 4, 32, 64, 64),      # heavy capacity drops
+    (4, 1, 1, 32, 16, 16),      # capacity=1
+    (4, 2, 8, 37, 24, 40),      # T, d, f with no friendly divisors
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_oracle_sweep(E, k, cap, T, d, f, dtype):
+    x, info, w_in, w_gate, w_out = make_case(E, k, cap, T, d, f, dtype)
+    y = ops.fused_moe_op(x, info, w_in, w_gate, w_out, E, cap,
+                         interpret=True)
+    y_ref = oracle_moe(x, info, w_in, w_gate, w_out, E, cap)
+    assert y.dtype == x.dtype
+    atol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("gated", [True, False])
+def test_fused_ungated_and_gelu_variants(gated):
+    x, info, w_in, w_gate, w_out = make_case(4, 2, 8, 48, 32, 32,
+                                             gated=gated)
+    for act in ("silu", "gelu"):
+        y = ops.fused_moe_op(x, info, w_in, w_gate, w_out, 4, 8, act,
+                             interpret=True)
+        y_ref = oracle_moe(x, info, w_in, w_gate, w_out, 4, 8, act)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-5)
+
+
+def test_fused_all_tokens_dropped_is_zero():
+    """keep == 0 everywhere (every routing choice masked) -> exact zeros."""
+    x, info, w_in, w_gate, w_out = make_case(4, 2, 8, 32, 16, 16)
+    info = info._replace(keep=jnp.zeros_like(info.keep))
+    y = ops.fused_moe_op(x, info, w_in, w_gate, w_out, 4, 8, interpret=True)
+    assert float(jnp.abs(y).max()) == 0.0
+
+
+def test_fused_block_size_invariance():
+    """Output must not depend on the f-block tiling."""
+    x, info, w_in, w_gate, w_out = make_case(4, 2, 8, 48, 32, 64)
+    tables = ops.routing_tables(info, 4, 8)
+    args = (x, w_in, w_gate, w_out, info.topk_w, info.keep,
+            tables.slot_token, tables.slot_valid, tables.token_slot)
+    y1 = fused_moe_ffn(*args, bf=64, interpret=True)
+    y2 = fused_moe_ffn(*args, bf=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend-level parity: outputs AND aux
+# ---------------------------------------------------------------------------
+
+def _backend_pair(cfg, x, token_valid=None, decision=False):
+    p = init_moe_params(jax.random.PRNGKey(0), cfg)
+    out = {}
+    for name in ("oracle", "pallas_fused"):
+        out[name] = get_backend(name)(
+            p, x, cfg, None, rng=jax.random.PRNGKey(7), decision=decision,
+            is_training=True, token_ids=None, token_valid=token_valid)
+    return out["oracle"], out["pallas_fused"]
+
+
+@pytest.mark.parametrize("decision", [False, True])
+def test_backend_parity_outputs_and_aux(decision):
+    cfg = reduced(get_config("zcode-m3-base"))
+    x = jax.random.normal(KEY, (4, 32, cfg.d_model))
+    (yo, ao), (yf, af) = _backend_pair(cfg, x, decision=decision)
+    np.testing.assert_allclose(np.asarray(yo), np.asarray(yf), atol=5e-6)
+    # aux must be backend-invariant: same drops, same expert load
+    np.testing.assert_allclose(np.asarray(ao["dropped_frac"]),
+                               np.asarray(af["dropped_frac"]), atol=0)
+    np.testing.assert_allclose(np.asarray(ao["load"]),
+                               np.asarray(af["load"]), atol=0)
+    np.testing.assert_allclose(np.asarray(ao["balance"]),
+                               np.asarray(af["balance"]), atol=1e-6)
+
+
+def test_backend_token_valid_slot_masking_regression():
+    """Serving slot masks must be honored by the megakernel gather:
+    retired rows produce EXACT zeros, stay out of expert-capacity
+    competition (their slots go to live tokens), and the fused backend
+    agrees with oracle under the same mask."""
+    cfg = reduced(get_config("zcode-m3-base"))
+    B, L = 4, 32
+    x = jax.random.normal(KEY, (B, L, cfg.d_model))
+    tv = jnp.ones((B, L), bool).at[1].set(False).at[3].set(False)
+    (yo, ao), (yf, af) = _backend_pair(cfg, x, token_valid=tv)
+    np.testing.assert_allclose(np.asarray(yo), np.asarray(yf), atol=5e-6)
+    np.testing.assert_allclose(np.asarray(ao["dropped_frac"]),
+                               np.asarray(af["dropped_frac"]), atol=0)
+    # retired rows contribute nothing
+    assert float(jnp.abs(yf[1]).max()) == 0.0
+    assert float(jnp.abs(yf[3]).max()) == 0.0
+
+
+def test_token_valid_vacates_capacity_slots():
+    """Masked rows must not occupy expert-buffer slots: with the front
+    half of the batch retired, valid tokens that lost the capacity race
+    in the unmasked run now win slots (DESIGN.md §11 index-table
+    contract — masking folds into keep, which drives the tables the
+    kernel gathers from)."""
+    moe = MoEConfig(n_experts=2, top_k=1, jitter_eps=0.0)
+    T, d, cap = 16, 8, 4
+    x = jax.random.normal(KEY, (T, d))
+    wr = jax.random.normal(jax.random.PRNGKey(1), (d, moe.n_experts))
+    rr = R.route(wr, x, moe, is_training=False)
+    full = R.dispatch_info(rr, moe.n_experts, cap)
+    mask = jnp.ones((T, 1), bool).at[:8].set(False)
+    msk = R.dispatch_info(rr, moe.n_experts, cap, valid=mask)
+    # masked rows never hold a slot
+    assert int(msk.keep[:8].sum()) == 0
+    # the unmasked run was capacity-bound: back-half tokens all lost
+    assert int(full.keep.sum()) == moe.n_experts * cap
+    assert int(full.keep[8:].sum()) == 0
+    # ...and with the front half retired, those same tokens win slots
+    assert int(msk.keep[8:].sum()) > 0
+
+
+def test_backend_grad_parity_under_jit():
+    cfg = reduced(get_config("zcode-m3-base"))
+    p = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+
+    def loss(name):
+        fn = get_backend(name)
+
+        def l(p_, x_):
+            y, _ = fn(p_, x_, cfg, None, rng=jax.random.PRNGKey(3),
+                      decision=False, is_training=True, token_ids=None)
+            return (y.astype(jnp.float32) ** 2).mean()
+
+        return jax.jit(jax.grad(l))(p, x)
+
+    go, gf = loss("oracle"), loss("pallas_fused")
+    for a, b in zip(jax.tree.leaves(go), jax.tree.leaves(gf)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# finite-difference gradient checks for every custom-VJP kernel
+# ---------------------------------------------------------------------------
+
+def _tables(E=4, k=2, cap=8, T=24, d=16):
+    moe = MoEConfig(n_experts=E, top_k=k, jitter_eps=0.0)
+    x = jax.random.normal(KEY, (T, d))
+    wr = jax.random.normal(jax.random.PRNGKey(1), (d, E))
+    rr = R.route(wr, x, moe, is_training=False)
+    info = R.dispatch_info(rr, E, cap)
+    return x, info, ops.routing_tables(info, E, cap)
+
+
+def test_check_grads_dispatch():
+    x, _, t = _tables()
+    check_grads(lambda x_: dispatch(x_, t.slot_token, t.slot_valid,
+                                    interpret=True),
+                (x,), order=1, modes=["rev"], atol=1e-2, rtol=1e-2)
+
+
+def test_check_grads_combine():
+    x, info, t = _tables()
+    buf = dispatch(x, t.slot_token, t.slot_valid, interpret=True)
+    check_grads(lambda b, w: combine(b, t.token_slot, w, info.keep,
+                                     interpret=True),
+                (buf, info.topk_w), order=1, modes=["rev"],
+                atol=1e-2, rtol=1e-2)
+
+
+def test_check_grads_grouped_matmul():
+    x = jax.random.normal(KEY, (2, 16, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16)) * 0.3
+    check_grads(lambda a, b: grouped_matmul(a, b, interpret=True),
+                (x, w), order=1, modes=["rev"], atol=1e-2, rtol=1e-2)
+
+
+def test_check_grads_megakernel():
+    x, info, t = _tables()
+    E, cap, d, f = 4, 8, 16, 16
+    w_in = jax.random.normal(jax.random.PRNGKey(2), (E, d, f)) * 0.1
+    w_g = jax.random.normal(jax.random.PRNGKey(3), (E, d, f)) * 0.1
+    w_out = jax.random.normal(jax.random.PRNGKey(4), (E, f, d)) * 0.1
+
+    def fn(x_, wi, wg, wo, tw):
+        return fused_moe_ffn(x_, wi, wg, wo, tw, info.keep, t.slot_token,
+                             t.slot_valid, t.token_slot, interpret=True)
+
+    check_grads(fn, (x, w_in, w_g, w_out, info.topk_w), order=1,
+                modes=["rev"], atol=1e-2, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash decode: per-row (slot-pool) index form
+# ---------------------------------------------------------------------------
+
+def test_flash_decode_per_row_index():
+    """Each batch row masked at its OWN depth — the slot-pool contract."""
+    from repro.kernels import flash_decode
+    b, h, kv, hd, s = 4, 4, 2, 32, 256
+    q = jax.random.normal(KEY, (b, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd))
+    idx = jnp.array([0, 17, 128, 255], jnp.int32)
+    o = flash_decode(q, k, v, idx, bs=64, interpret=True)
+    o_ref = ref.flash_decode_ref(q, k, v, idx)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+    # row i must match a scalar-index call at idx[i]
+    for i in range(b):
+        oi = flash_decode(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                          int(idx[i]), bs=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o[i]), np.asarray(oi[0]),
+                                   atol=2e-5)
