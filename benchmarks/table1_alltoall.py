@@ -37,7 +37,7 @@ cfg = ModelConfig(d_model=512, d_ff=1024, vocab=100, moe=MoEConfig(
 p = init_moe_params(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (64, 128, 512), jnp.float32)
 res = {}
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis import parse_collectives
 for dec, name in [(False, 'routed'), (True, 'dropped')]:
     f = jax.jit(lambda p, x: moe_sharded(p, x, cfg, ctx,
                 rng=jax.random.PRNGKey(2), decision=dec)[0])

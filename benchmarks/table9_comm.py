@@ -45,7 +45,7 @@ from repro.core import init_moe_params, moe_sharded, ParallelContext
 from repro.core.moe import _select_branch
 from repro.comm import layer_cost
 from repro.data import LMTaskConfig, SyntheticLM, stack_batches
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis import parse_collectives
 from repro.launch.mesh import make_mesh
 from repro.models import init_model
 from repro.training import Trainer, init_train_state, make_chunk_step

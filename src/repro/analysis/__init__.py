@@ -1,0 +1,23 @@
+"""Compiled-program lint subsystem (DESIGN.md §12).
+
+Static analysis over the two IRs the repo compiles through: the jaxpr
+(pre-lowering truth for dtypes, pallas launches, block footprints) and
+compiled HLO text (post-lowering truth for collectives). Five passes
+gate the paper's structural invariants — zero-communication dropped
+paths, bytes==cost-model routed paths, 16-bit dtype discipline, VMEM
+residency, kernel-launch budgets, hidden host syncs — over every named
+executable the system ships.
+
+``python -m repro.launch.lint --gate`` runs the suite.
+
+Importing this package is cheap (host-only); submodules that touch jax
+import it lazily inside functions where possible.
+"""
+from repro.analysis.hlo import (COLLECTIVE_OPS, DTYPE_BYTES, HloInstr,
+                                HloModule, UnknownDtypeError,
+                                collectives_summary, parse_collectives,
+                                parse_hlo, shape_bytes)
+
+__all__ = ["COLLECTIVE_OPS", "DTYPE_BYTES", "HloInstr", "HloModule",
+           "UnknownDtypeError", "collectives_summary", "parse_collectives",
+           "parse_hlo", "shape_bytes"]

@@ -1,0 +1,164 @@
+"""Portable host-transfer guard (DESIGN.md §12, host-sync pass).
+
+``jax.transfer_guard_device_to_host`` is a no-op on the CPU backend
+(device buffers ARE host buffers, so the zero-copy path never trips
+it) — useless on the 8-device CPU mesh this repo's CI runs on. This
+guard intercepts the Python-level sync points instead: the jax.Array
+scalar dunders (``float()``, ``int()``, ``bool()``, ``.item()``) and
+the numpy conversion entry points (``np.asarray`` & co.) — on CPU,
+numpy reads a jax array through the C buffer protocol without ever
+calling ``__array__``, so the numpy FUNCTIONS are wrapped, not just
+the dunder. Explicit ``jax.device_get`` stays sanctioned, matching the
+native guard's implicit/explicit split, so code that means to sync
+says so.
+
+Events record the first repo frame that triggered the pull, so a
+finding points at scheduler.py:NNN, not at numpy internals.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import traceback
+from typing import Callable, List, Optional, Tuple
+
+__all__ = ["TransferEvent", "guard_host_transfers", "jit_cache_sizes"]
+
+_HOOKS = ("__array__", "__float__", "__int__", "__index__", "__bool__",
+          "item")
+# numpy entry points that pull device buffers host-side (via the buffer
+# protocol, invisibly to __array__) when handed a jax Array
+_NP_FUNCS = ("asarray", "array", "asanyarray", "ascontiguousarray",
+             "stack", "concatenate")
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferEvent:
+    method: str              # which dunder pulled the value
+    origin: str              # "path/file.py:lineno (func)" of the caller
+    sanctioned: bool         # inside an explicit jax.device_get
+    internal: bool           # triggered by jax machinery (const lowering,
+                             # dispatch plumbing) — not a user-code sync
+
+
+def _caller_origin():
+    """(origin, internal): origin is the first stack frame outside this
+    module / jax / numpy internals; internal is True when the INNERMOST
+    real frame is jax's own machinery (e.g. np.asarray of a captured
+    constant during lowering) rather than repo/user code."""
+    stack = traceback.extract_stack()
+    internal = None
+    origin = "<unknown>"
+    for frame in reversed(stack):
+        f = frame.filename
+        if "analysis/hostsync" in f:
+            continue
+        if internal is None:
+            internal = "/jax/" in f or "jax_plugins" in f
+        if "/jax/" in f or "/numpy/" in f or "jax_plugins" in f:
+            continue
+        origin = f"{f}:{frame.lineno} ({frame.name})"
+        break
+    return origin, bool(internal)
+
+
+@contextlib.contextmanager
+def guard_host_transfers(*, mode: str = "record",
+                         events: Optional[List[TransferEvent]] = None):
+    """Intercept implicit jax.Array device->host pulls.
+
+    mode="record": append a TransferEvent per pull to ``events`` and let
+    it proceed (the lint pass classifies afterwards).
+    mode="raise": raise RuntimeError on the first UNsanctioned pull (the
+    conftest fixture's enforcement mode).
+
+    Yields the event list. Explicit ``jax.device_get`` calls are wrapped
+    to mark their pulls sanctioned. Re-entrant within a thread; patches
+    are process-global while active, but recording is per-call."""
+    import jax
+    from jax._src.array import ArrayImpl
+
+    assert mode in ("record", "raise"), mode
+    evs: List[TransferEvent] = events if events is not None else []
+
+    def _hit(method: str):
+        sanctioned = getattr(_state, "sanctioned", 0) > 0
+        origin, internal = _caller_origin()
+        ev = TransferEvent(method=method, origin=origin,
+                           sanctioned=sanctioned, internal=internal)
+        evs.append(ev)
+        if mode == "raise" and not (sanctioned or internal):
+            raise RuntimeError(
+                f"implicit device->host transfer via {method} at "
+                f"{ev.origin}; use jax.device_get for intentional syncs "
+                f"(analysis.hostsync guard)")
+
+    saved = {}
+    for name in _HOOKS:
+        orig = getattr(ArrayImpl, name, None)
+        if orig is None:
+            continue
+        saved[name] = orig
+
+        def wrapper(self, *a, _orig=orig, _name=name, **kw):
+            _hit(_name)
+            return _orig(self, *a, **kw)
+
+        setattr(ArrayImpl, name, wrapper)
+
+    import numpy as np
+
+    def _holds_device_array(obj, depth=2):
+        if isinstance(obj, ArrayImpl):
+            return True
+        if depth and isinstance(obj, (list, tuple)):
+            return any(_holds_device_array(o, depth - 1) for o in obj)
+        return False
+
+    saved_np = {}
+    for fname in _NP_FUNCS:
+        nf = getattr(np, fname, None)
+        if nf is None:
+            continue
+        saved_np[fname] = nf
+
+        def np_wrapper(*a, _orig=nf, _name=fname, **kw):
+            if any(_holds_device_array(x) for x in a):
+                _hit(f"np.{_name}")
+            return _orig(*a, **kw)
+
+        setattr(np, fname, np_wrapper)
+
+    orig_get = jax.device_get
+
+    def sanctioned_get(x):
+        _state.sanctioned = getattr(_state, "sanctioned", 0) + 1
+        try:
+            return orig_get(x)
+        finally:
+            _state.sanctioned -= 1
+
+    jax.device_get = sanctioned_get
+    try:
+        yield evs
+    finally:
+        jax.device_get = orig_get
+        for name, orig in saved.items():
+            setattr(ArrayImpl, name, orig)
+        for fname, orig in saved_np.items():
+            setattr(np, fname, orig)
+
+
+def jit_cache_sizes(fns) -> Tuple[int, ...]:
+    """Compiled-variant counts of jitted callables — the cache-miss
+    detector's snapshot primitive. A steady-state serving/training loop
+    must not grow any of these between ticks (a growth means a tick
+    re-traced: a shape leak, a weak-type flip, a python-hash dependency)."""
+    sizes = []
+    for fn in fns:
+        size = getattr(fn, "_cache_size", None)
+        sizes.append(int(size()) if callable(size) else -1)
+    return tuple(sizes)

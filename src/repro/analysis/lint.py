@@ -1,0 +1,148 @@
+"""Lint suite driver (DESIGN.md §12): run every pass over every
+registered executable, aggregate a report, gate CI.
+
+The driver never raises on a violation — each (executable, pass) cell
+runs independently so one broken invariant can't mask another; a crash
+while BUILDING an executable becomes an "error" finding against that
+executable (the lint suite must not silently skip a program that stops
+lowering). ``gate()`` fails iff any unsuppressed error survives.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.executables import (Artifacts, available_executables,
+                                        get_executable)
+from repro.analysis.passes import (Finding, available_passes, get_pass,
+                                   run_pass)
+
+__all__ = ["format_report", "gate", "lint_table", "run_lint"]
+
+STATIC_NEEDS = ("hlo", "jaxpr")     # artifacts obtainable by pure lowering
+
+
+def _applicable(spec, pass_id: str) -> bool:
+    p = get_pass(pass_id)
+    if "scenario" in p.needs:
+        return spec.scenario is not None
+    return pass_id in spec.expect
+
+
+def run_lint(*, only: Optional[Sequence[str]] = None,
+             passes: Optional[Sequence[str]] = None,
+             static_only: bool = False) -> List[Finding]:
+    """Run the suite. ``only`` restricts executables (exact names),
+    ``passes`` restricts pass ids, ``static_only`` drops scenario passes
+    (pure lowering — the --lint-table mode)."""
+    import jax
+
+    names = tuple(only) if only else available_executables()
+    pids = tuple(passes) if passes else available_passes()
+    findings: List[Finding] = []
+    for name in names:
+        spec = get_executable(name)
+        if spec.n_devices > jax.device_count():
+            findings.append(Finding(
+                pass_id="driver", severity="warning", executable=name,
+                location="driver",
+                message=f"skipped: needs {spec.n_devices} devices, "
+                        f"{jax.device_count()} visible (set XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count=8)"))
+            continue
+        art = Artifacts(spec)
+        for pid in pids:
+            if static_only and "scenario" in get_pass(pid).needs:
+                continue
+            if not _applicable(spec, pid):
+                continue
+            try:
+                findings.extend(run_pass(pid, spec, art))
+            except Exception as e:           # build/lowering crash
+                findings.append(Finding(
+                    pass_id=pid, severity="error", executable=name,
+                    location="driver",
+                    message=f"pass crashed: {type(e).__name__}: {e}"))
+    return findings
+
+
+def gate(findings: Sequence[Finding]) -> Tuple[bool, str]:
+    """(ok, one-line verdict): fails iff an unsuppressed error survives."""
+    errs = [f for f in findings
+            if f.severity == "error" and not f.suppressed]
+    supp = sum(1 for f in findings if f.suppressed)
+    warn = sum(1 for f in findings if f.severity == "warning")
+    if errs:
+        return False, (f"LINT GATE: FAIL — {len(errs)} error(s) "
+                       f"({warn} warning(s), {supp} suppressed)")
+    return True, (f"LINT GATE: ok — 0 errors ({warn} warning(s), "
+                  f"{supp} suppressed)")
+
+
+def format_report(findings: Sequence[Finding]) -> str:
+    if not findings:
+        return "lint: clean (no findings)"
+    lines = []
+    for f in sorted(findings, key=lambda f: (f.executable, f.pass_id)):
+        tag = f"{f.severity}{' (suppressed)' if f.suppressed else ''}"
+        lines.append(f"[{tag}] {f.executable} :: {f.pass_id}\n"
+                     f"    at {f.location}\n    {f.message}")
+    return "\n".join(lines)
+
+
+def report_json(findings: Sequence[Finding]) -> str:
+    ok, verdict = gate(findings)
+    return json.dumps({"ok": ok, "verdict": verdict,
+                       "findings": [f.as_dict() for f in findings]},
+                      indent=2)
+
+
+def lint_table(*, only: Optional[Sequence[str]] = None
+               ) -> Dict[str, Dict[str, str]]:
+    """pass x executable matrix of the STATIC passes (pure lowering, no
+    execution): cell is "ok" | "FAIL" | "supp" | "-" (inapplicable) |
+    "skip" (not enough devices). The --lint-table payload."""
+    import jax
+
+    names = tuple(only) if only else available_executables()
+    static_pids = tuple(p for p in available_passes()
+                        if "scenario" not in get_pass(p).needs)
+    table: Dict[str, Dict[str, str]] = {}
+    for name in names:
+        spec = get_executable(name)
+        row: Dict[str, str] = {}
+        if spec.n_devices > jax.device_count():
+            table[name] = {p: "skip" for p in static_pids}
+            continue
+        art = Artifacts(spec)
+        for pid in static_pids:
+            if not _applicable(spec, pid):
+                row[pid] = "-"
+                continue
+            try:
+                fs = run_pass(pid, spec, art)
+            except Exception:
+                row[pid] = "FAIL"
+                continue
+            errs = [f for f in fs if f.severity == "error"]
+            if not errs:
+                row[pid] = "ok"
+            else:
+                row[pid] = "supp" if all(f.suppressed for f in errs) \
+                    else "FAIL"
+        table[name] = row
+    return table
+
+
+def format_lint_table(table: Dict[str, Dict[str, str]]) -> str:
+    if not table:
+        return "(no executables)"
+    pids = sorted({p for row in table.values() for p in row})
+    w = max(len(n) for n in table) + 2
+    hdr = "executable".ljust(w) + "".join(p.ljust(16) for p in pids)
+    lines = [hdr, "-" * len(hdr)]
+    for name in sorted(table):
+        row = table[name]
+        lines.append(name.ljust(w)
+                     + "".join(row.get(p, "-").ljust(16) for p in pids))
+    return "\n".join(lines)

@@ -2,8 +2,9 @@
 
 THE single source of truth for "how many bytes does a routed MoE layer
 move": the in-graph telemetry counters (`comm/substrate.py`) are computed
-FROM these functions, and `tests/test_comm.py` pins both against the
-collective ops parsed out of compiled HLO (`launch/hlo_analysis.py::
+FROM these functions, and `tests/test_comm.py` plus the lint suite's
+no-collectives pass (`analysis/passes.py`) pin both against the
+collective ops parsed out of compiled HLO (`analysis/hlo.py::
 parse_collectives`), so the three views — counters in the metrics stream,
 this model, and the executable itself — cannot drift apart.
 
@@ -24,10 +25,14 @@ from __future__ import annotations
 import math
 from typing import Dict, Optional
 
+from repro.analysis.hlo import DTYPE_BYTES
 from repro.configs.base import CommConfig, ModelConfig
 
-_QUANT_ITEMSIZE = {"int8": 1, "fp8": 1}
-_SCALE_ITEMSIZE = 4          # one f32 scale per (expert, capacity-slot) row
+# wire itemsizes come from the ONE dtype table the HLO walker uses to
+# size collectives, so the model can't disagree with the parser about
+# what an int8/fp8 payload weighs (CommConfig.quant -> HLO dtype name)
+_QUANT_ITEMSIZE = {"int8": DTYPE_BYTES["s8"], "fp8": DTYPE_BYTES["f8e4m3fn"]}
+_SCALE_ITEMSIZE = DTYPE_BYTES["f32"]  # one scale per (expert, cap-slot) row
 
 
 def factored_ep(ep: int, ep_inner: int = 0):

@@ -50,7 +50,8 @@ def drop_decision_host(cfg: GatingDropoutConfig, seed: int, step: int, *,
     """Concrete python bool for the host_cond strategy (same draw as above)."""
     if not is_training or not cfg.enabled:
         return False
-    return bool(np.asarray(jax.random.bernoulli(decision_key(seed, step), cfg.rate)))
+    return bool(jax.device_get(
+        jax.random.bernoulli(decision_key(seed, step), cfg.rate)))
 
 
 @jax.jit
@@ -71,8 +72,9 @@ def drop_decisions_host(cfg: GatingDropoutConfig, seed: int, start: int,
     n = max(stop - start, 0)
     if not is_training or not cfg.enabled or n == 0:
         return np.zeros(n, bool)
-    return np.asarray(_decisions_batch(seed, jnp.arange(start, stop),
-                                       cfg.rate))
+    # explicit sync: drawing the chunk's bits host-side IS the strategy
+    return jax.device_get(_decisions_batch(seed, jnp.arange(start, stop),
+                                           cfg.rate))
 
 
 def expected_alltoall_fraction(cfg: GatingDropoutConfig) -> float:

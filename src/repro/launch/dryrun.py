@@ -64,7 +64,7 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
 # collective parsing
 # ---------------------------------------------------------------------------
 
-from repro.launch.hlo_analysis import parse_collectives  # noqa: E402
+from repro.analysis import parse_collectives  # noqa: E402
 
 # ---------------------------------------------------------------------------
 # lowering per shape kind
@@ -246,6 +246,10 @@ def main():
     ap.add_argument("--comm-quant", default="int8", choices=["int8", "fp8"],
                     help="wire dtype the --comm-table prices compressed "
                          "substrates at")
+    ap.add_argument("--lint-table", action="store_true",
+                    help="print the static lint pass x executable matrix "
+                         "(analysis/lint.py; pure lowering, nothing is "
+                         "executed)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--decision", default=None, choices=[None, "routed", "dropped"],
                     help="bake a static gating-dropout decision (host_cond)")
@@ -260,6 +264,10 @@ def main():
         assert args.arch and args.shape, "--comm-table needs --arch --shape"
         comm_table(args.arch, args.shape, multi_pod=args.multi_pod,
                    quant=args.comm_quant)
+        return
+    if args.lint_table:
+        from repro.analysis.lint import format_lint_table, lint_table
+        print(format_lint_table(lint_table()))
         return
     dec = {None: None, "routed": False, "dropped": True}[args.decision]
     overrides = {}

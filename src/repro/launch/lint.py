@@ -1,0 +1,77 @@
+"""CLI for the compiled-program lint suite (DESIGN.md §12).
+
+    python -m repro.launch.lint                    # full report
+    python -m repro.launch.lint --gate             # CI: exit 1 on errors
+    python -m repro.launch.lint --json-out r.json  # machine-readable
+    python -m repro.launch.lint --table            # pass x executable grid
+    python -m repro.launch.lint --only moe_layer/dense --passes no-collectives
+
+Must configure the 8-device CPU mesh BEFORE jax initializes, hence the
+env mutation at module top (same pattern as launch/dryrun.py).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.lint",
+        description="HLO/jaxpr lint over every registered executable")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 if any unsuppressed error survives")
+    ap.add_argument("--json-out", metavar="PATH",
+                    help="write the full report as JSON")
+    ap.add_argument("--table", action="store_true",
+                    help="print the static pass x executable matrix")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="EXECUTABLE",
+                    help="restrict to named executable(s)")
+    ap.add_argument("--passes", action="append", default=None,
+                    metavar="PASS", help="restrict to pass id(s)")
+    ap.add_argument("--static-only", action="store_true",
+                    help="skip scenario passes (pure lowering)")
+    ap.add_argument("--list", action="store_true",
+                    help="list executables and passes, run nothing")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.executables import available_executables
+    from repro.analysis.lint import (format_lint_table, format_report, gate,
+                                     lint_table, report_json, run_lint)
+    from repro.analysis.passes import available_passes, get_pass
+
+    if args.list:
+        print("passes:")
+        for p in available_passes():
+            print(f"  {p:<16} {get_pass(p).doc.splitlines()[0]}")
+        print("executables:")
+        for n in available_executables():
+            print(f"  {n}")
+        return 0
+
+    if args.table:
+        print(format_lint_table(lint_table(only=args.only)))
+        return 0
+
+    findings = run_lint(only=args.only, passes=args.passes,
+                        static_only=args.static_only)
+    print(format_report(findings))
+    ok, verdict = gate(findings)
+    print(verdict)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(report_json(findings))
+        print(f"wrote {args.json_out}")
+    return 0 if (ok or not args.gate) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -316,8 +316,7 @@ class ContinuousScheduler:
             self.params, batch, jnp.asarray(lengths), jnp.asarray(slots),
             self.pool, self.rng, jnp.asarray(seeds))
         self.pool = pool
-        tok0 = np.asarray(tok0)
-        lp0 = np.asarray(lp0)
+        tok0, lp0 = jax.device_get((tok0, lp0))   # the tick's one sync
         t_first = self._now()
         for i, req in enumerate(group):
             s = int(slots[i])
@@ -350,8 +349,7 @@ class ContinuousScheduler:
             jnp.asarray(self._pos), jnp.asarray(alive), self.rng,
             jnp.asarray(self._seed), jnp.asarray(self._ngen))
         self.pool = pool
-        nxt = np.asarray(nxt)
-        lp = np.asarray(lp)
+        nxt, lp = jax.device_get((nxt, lp))       # the tick's one sync
         for s in range(self.n_slots):
             if not alive[s]:
                 continue

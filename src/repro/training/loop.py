@@ -206,7 +206,9 @@ class Trainer:
     def _dispatch(self, span: Tuple[int, int], stacked: Dict
                   ) -> Dict[str, np.ndarray]:
         """Run one chunk; returns per-step metrics stacked over the span
-        (the chunk's ONLY host-device sync, via np.asarray)."""
+        (the chunk's ONLY host-device sync, via an explicit
+        jax.device_get — the analysis.hostsync guard flags implicit
+        pulls inside steady-state ticks)."""
         s, e = span
         if self.strategy == "traced_cond":
             dev = {k: jnp.asarray(v) for k, v in stacked.items()}
@@ -219,7 +221,8 @@ class Trainer:
                        for k, v in stacked.items()}
                 self.state, m = self.chunk_fn(self.state, sub, dec)
                 parts.append(m)
-        return {k: np.concatenate([np.asarray(p[k]) for p in parts])
+        parts = jax.device_get(parts)
+        return {k: np.concatenate([p[k] for p in parts])
                 for k in parts[0]}
 
     def run(self) -> Tuple[Any, List[Dict]]:

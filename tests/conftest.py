@@ -23,6 +23,36 @@ def run_py(code: str, n_devices: int = 8, timeout: int = 560) -> str:
     return r.stdout
 
 
+_GUARDED_MODULES = ("test_trainer", "test_serve", "test_scheduler")
+
+
+@pytest.fixture(autouse=True)
+def _no_hidden_host_transfers(request):
+    """Transfer guard over the trainer/serving test modules (DESIGN.md
+    §12): library code under src/repro must not pull device buffers to
+    host implicitly (np.asarray / float / .item on a jax Array) — the
+    sanctioned sync is an explicit jax.device_get. Test-file code may
+    pull freely (asserting on values is what tests do); only events
+    originating inside src/repro fail."""
+    mod = request.module.__name__.rsplit(".", 1)[-1]
+    if mod not in _GUARDED_MODULES:
+        yield
+        return
+    from repro.analysis.hostsync import guard_host_transfers
+    with guard_host_transfers(mode="record") as events:
+        yield
+    bad = [ev for ev in events
+           if not ev.sanctioned and not ev.internal
+           and os.path.join("src", "repro") in ev.origin]
+    if bad:
+        lines = "\n".join(f"  {ev.method} at {ev.origin}"
+                          for ev in {(e.method, e.origin): e
+                                     for e in bad}.values())
+        pytest.fail(
+            f"implicit device->host transfer(s) in library code "
+            f"(use jax.device_get):\n{lines}", pytrace=False)
+
+
 def make_batch(cfg, key, B=2, L=33):
     batch = {"tokens": jax.random.randint(key, (B, L), 3, cfg.vocab)}
     if cfg.vlm is not None:

@@ -302,7 +302,7 @@ from repro.comm import layer_cost
 from repro.core import init_moe_params, moe_sharded, ParallelContext
 from repro.core import router as R
 from repro.core.moe import _expert_ffn, _shard_map, moe_oracle
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis import parse_collectives
 from repro.launch.mesh import make_mesh
 
 def cfg_with(comm):
