@@ -65,6 +65,11 @@ def bench_table9(fast):
     return main(fast)
 
 
+def bench_table10(fast):
+    from benchmarks.table10_paged import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -108,6 +113,7 @@ BENCHES = {
     "table7": bench_table7,
     "table8": bench_table8,
     "table9": bench_table9,
+    "table10": bench_table10,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

@@ -1,0 +1,202 @@
+"""Table 10 (beyond paper): paged KV cache vs slot pool at equal memory.
+
+The paged-KV claim (DESIGN.md §13): at EQUAL pinned KV-cache memory, the
+block-table scheduler sustains >= 1.5x the concurrency of the slot pool
+on the table8 long-tail trace. A slot pool pins one full ``max_seq`` row
+per concurrent request, so its concurrency IS its memory budget; the
+page arena allocates per-page, so short requests (75% of the long-tail
+trace) stop stranding the tail of their rows and the freed pages admit
+more requests.
+
+Measured per arch (table8's narrowed reduced configs):
+
+  * slot  -- `ContinuousScheduler` with ``mem_slots`` slots: the memory
+             budget baseline (``mem_slots`` full cache rows).
+  * paged -- `PagedScheduler` with an arena of ``mem_slots`` full-length
+             requests' worth of pages (equal pageable-leaf bytes,
+             asserted) and a concurrency cap of ``paged_slots`` — page
+             availability, not slot count, is the binding constraint.
+  * paged_noshare -- prefix caching off; bitwise token equality with the
+             shared run is asserted (sharing must be invisible).
+
+Sustained concurrency = mean live slots per decode tick
+(``scheduler.alive_log``). Bitwise per-request greedy parity is asserted
+in-benchmark for EVERY request across slot / paged / paged_noshare /
+one-shot ``generate``. The trace shares a common prompt prefix across
+half the requests so the prefix cache takes real hits (reported as
+``prefix_hit_rate``). Results land in
+``benchmarks/artifacts/table10_paged.json`` (schema: benchmarks/
+README.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import ART, csv_row
+from benchmarks.table8_serving import _bench_cfg, _extras
+from repro.configs import PagedKVConfig
+from repro.models import init_model
+from repro.serve import (ContinuousScheduler, GenerateConfig, PagedScheduler,
+                         Request, generate, paged_kv_bytes)
+from repro.serve.paged import _cache_page_axes
+
+ARCHS = ["yi-6b", "zcode-m3-base"]
+KEY = jax.random.PRNGKey(0)
+
+
+def make_trace(cfg, key, n: int, lens: List[int], max_new: int,
+               prefix_len: int) -> List[Request]:
+    """table8's long-tail trace (backlogged, 75% short budgets) with one
+    twist: every even-rid request starts with the same ``prefix_len``
+    token prefix, so consecutive admissions hit the prefix cache."""
+    rs = np.random.RandomState(7)
+    common = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 9999), (prefix_len,), 3, cfg.vocab),
+        np.int32)
+    reqs = []
+    for i in range(n):
+        plen = lens[i % len(lens)]
+        if rs.rand() < 0.75:
+            budget = int(rs.randint(2, 9))
+        else:
+            budget = int(rs.randint(max(2, max_new - 8), max_new + 1))
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 3, cfg.vocab), np.int32)
+        if i % 2 == 0 and plen > prefix_len:
+            toks = np.concatenate([common, toks[prefix_len:]])
+        reqs.append(Request(
+            rid=i, tokens=toks, max_new=budget, arrival=0.0,
+            extras=_extras(cfg, jax.random.fold_in(key, 1000 + i))))
+    return reqs
+
+
+def _pageable_bytes(pool, cfg) -> int:
+    """Bytes of the seq-tracking leaves of a SLOT pool — what the paged
+    arena replaces (same structural discovery as `paged_kv_bytes`)."""
+    _, seq = _cache_page_axes(cfg)
+    return int(sum(jax.tree.leaves(jax.tree.map(
+        lambda leaf, as_: leaf.size * leaf.dtype.itemsize if as_ >= 0
+        else 0, pool, seq))))
+
+
+def _serve(sched, reqs):
+    t0 = time.perf_counter()
+    results = sched.run([dataclasses.replace(r) for r in reqs])
+    wall = time.perf_counter() - t0
+    toks = {r.rid: r.tokens for r in results}
+    n_tok = int(sum(r.length for r in results))
+    alive = float(np.mean(sched.alive_log)) if sched.alive_log else 0.0
+    return toks, n_tok, wall, alive
+
+
+def bench_arch(arch: str, *, n_req: int, mem_slots: int, paged_slots: int,
+               page_size: int, max_new: int, lens: List[int],
+               buckets) -> Dict:
+    cfg = _bench_cfg(arch)
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=max_new, eos_id=-1)
+    reqs = make_trace(cfg, jax.random.fold_in(KEY, 2), n_req, lens,
+                      max_new, prefix_len=page_size)
+
+    def slot_sched():
+        return ContinuousScheduler(params, cfg, gen, n_slots=mem_slots,
+                                   prefill_buckets=buckets)
+
+    def paged_sched(share: bool):
+        return PagedScheduler(
+            params, cfg, gen, n_slots=paged_slots, prefill_buckets=buckets,
+            paged=PagedKVConfig(page_size=page_size,
+                                n_slots_equiv=mem_slots,
+                                prefix_caching=share))
+
+    # warmup replays (compiles), then the measured replay
+    _serve(slot_sched(), reqs)
+    s = slot_sched()
+    s_toks, n_tok, s_wall, s_alive = _serve(s, reqs)
+    _serve(paged_sched(True), reqs)
+    p = paged_sched(True)
+    p_toks, _, p_wall, p_alive = _serve(p, reqs)
+    u = paged_sched(False)
+    u_toks, _, _, _ = _serve(u, reqs)
+
+    # equal-memory check: the arena's pageable bytes must not exceed what
+    # the slot pool pins for the same leaves (scratch page << scratch row)
+    slot_bytes = _pageable_bytes(s.pool, cfg)
+    arena_bytes = paged_kv_bytes(p.pool, cfg)
+    assert arena_bytes <= slot_bytes, (arena_bytes, slot_bytes)
+
+    # bitwise parity: every request, all four paths
+    gref = dataclasses.replace(gen, max_seq=s.max_seq)
+    for r in reqs:
+        batch = {"tokens": r.tokens[None]}
+        for k, v in r.extras.items():
+            batch[k] = v[None]
+        one = generate(params, batch, cfg, gref)
+        n = min(int(one.lengths[0]), r.max_new)
+        ref = np.asarray(one.tokens)[0, :n]
+        assert np.array_equal(s_toks[r.rid], ref), (arch, "slot", r.rid)
+        assert np.array_equal(p_toks[r.rid], ref), (arch, "paged", r.rid)
+        assert np.array_equal(u_toks[r.rid], ref), (arch, "noshare", r.rid)
+
+    ratio = p_alive / s_alive if s_alive else 0.0
+    rec = {
+        "slot": {"n_slots": mem_slots, "wall_s": s_wall,
+                 "tok_s": n_tok / s_wall, "mean_alive": s_alive,
+                 "pageable_kv_bytes": slot_bytes},
+        "paged": {"n_slots": paged_slots, "page_size": page_size,
+                  "n_pages": p.layout.n_pages, "wall_s": p_wall,
+                  "tok_s": n_tok / p_wall, "mean_alive": p_alive,
+                  "arena_kv_bytes": arena_bytes,
+                  "prefix_hit_rate": p.stats["prefix_hits"]
+                  / max(p.stats["prefix_lookups"], 1),
+                  "scheduler": {k: p.stats[k] for k in
+                                ("prefix_hits", "cow_copies", "preemptions",
+                                 "swap_ins", "peak_pages_in_use")}},
+        "useful_tokens": n_tok,
+        "concurrency_ratio": ratio,
+        "parity": True,
+        "share_equals_noshare": True,
+    }
+    csv_row(f"table10/{arch}", p_wall * 1e6,
+            f"mean_alive={p_alive:.2f}vs{s_alive:.2f};"
+            f"concurrency_ratio={ratio:.2f}x;"
+            f"prefix_hit_rate={rec['paged']['prefix_hit_rate']:.2f};"
+            f"parity=True")
+    return rec
+
+
+def main(fast: bool = True):
+    n_req = 32 if fast else 64
+    mem_slots, paged_slots, page_size = 4, 12, 8
+    max_new = 24 if fast else 48
+    lens = [5, 12, 11, 16]
+    buckets = (8, 16)
+    out = {"shape": {"n_requests": n_req, "mem_slots": mem_slots,
+                     "paged_slots": paged_slots, "page_size": page_size,
+                     "max_new": max_new, "prompt_lens": lens,
+                     "buckets": list(buckets)},
+           "archs": {}}
+    for arch in ARCHS:
+        out["archs"][arch] = bench_arch(
+            arch, n_req=n_req, mem_slots=mem_slots,
+            paged_slots=paged_slots, page_size=page_size, max_new=max_new,
+            lens=lens, buckets=buckets)
+    ratios = [a["concurrency_ratio"] for a in out["archs"].values()]
+    out["min_concurrency_ratio"] = min(ratios)
+    assert out["min_concurrency_ratio"] >= 1.5, \
+        f"paged concurrency under 1.5x at equal KV memory: {ratios}"
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table10_paged.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(fast=False), indent=1))

@@ -251,6 +251,36 @@ def _build_decode_pool(local_routing: bool):
     return build
 
 
+def _build_decode_paged(local_routing: bool):
+    def build():
+        import jax
+        import jax.numpy as jnp
+        from repro.core.moe import ParallelContext
+        from repro.launch.mesh import make_mesh
+        from repro.models import init_model
+        from repro.serve.paged import (PagedLayout, decode_paged_step,
+                                       paged_pool_like)
+        cfg = _decode_cfg()
+        ctx = ParallelContext(mesh=make_mesh((8,), ("data",)))
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        S, max_seq = 8, 32
+        layout = PagedLayout(page_size=8, n_pages=24, seq_len=max_seq)
+        batch = {"tokens": jnp.zeros((S, 4), jnp.int32)}
+        pool = paged_pool_like(params, batch, cfg, ctx, max_seq=max_seq,
+                               n_slots=S, layout=layout)
+        tables = jnp.tile(jnp.arange(layout.n_blocks, dtype=jnp.int32),
+                          (S, 1))
+        tok = jnp.zeros((S,), jnp.int32)
+        pos = jnp.full((S,), 4, jnp.int32)
+        alive = jnp.ones((S,), bool)
+
+        def fn(p_, c_, bt_, t_, i_, a_):
+            return decode_paged_step(p_, c_, bt_, t_, i_, a_, cfg, ctx,
+                                     local_routing=local_routing)
+        return fn, (params, pool, tables, tok, pos, alive)
+    return build
+
+
 def _build_pallas_fused(mode: str):
     def build():
         import jax
@@ -312,6 +342,25 @@ def _build_flash_decode():
         def fn(q_, k_, v_, i_):
             return flash_decode(q_, k_, v_, i_, interpret=True)
         return fn, (q, k, v, idx)
+    return build
+
+
+def _build_flash_decode_paged():
+    def build():
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.flash_decode import flash_decode_paged
+        key = jax.random.PRNGKey(0)
+        B, H, KV, hd, ps, npg, nb = 8, 4, 2, 16, 16, 24, 4
+        q = jax.random.normal(key, (B, H, hd))
+        k = jax.random.normal(key, (npg + 1, ps, KV, hd))
+        v = jax.random.normal(key, (npg + 1, ps, KV, hd))
+        bt = jnp.tile(jnp.arange(nb, dtype=jnp.int32), (B, 1))
+        idx = jnp.full((B,), 17, jnp.int32)
+
+        def fn(q_, k_, v_, bt_, i_):
+            return flash_decode_paged(q_, k_, v_, bt_, i_, interpret=True)
+        return fn, (q, k, v, bt, idx)
     return build
 
 
@@ -398,6 +447,42 @@ def _scheduler_scenario():
                             ("bucket_prefill", before[1], after[1])]}
 
 
+def _paged_scheduler_scenario():
+    import numpy as np
+    from repro.analysis.hostsync import guard_host_transfers, jit_cache_sizes
+    from repro.configs.base import PagedKVConfig
+    from repro.serve.engine import GenerateConfig
+    from repro.serve.scheduler import PagedScheduler, Request
+    from repro.models import init_model
+    import jax
+    import dataclasses as dc
+    cfg = dc.replace(_moe_cfg(backend="oracle"), n_layers=1, n_heads=2,
+                     n_kv_heads=2, remat=False)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new=24, eos_id=-1)
+    # ample pages: the steady-state tick must stay on the one-sync path
+    # (preemption swap-out is the documented exceptional second sync)
+    sched = PagedScheduler(params, cfg, gen, n_slots=4,
+                           prefill_buckets=(8,),
+                           paged=PagedKVConfig(page_size=8,
+                                               n_slots_equiv=8))
+    for rid in range(3):
+        sched.submit(Request(rid=rid,
+                             tokens=np.arange(3 + rid, dtype=np.int32) + 3))
+    sched.step(0.0)                              # warmup: prefill + decode
+    sched.step(0.0)                              # warmup: steady decode
+    jits = [sched._decode_fn, sched._prefill]
+    evs = []
+    with guard_host_transfers(events=evs):
+        before = jit_cache_sizes(jits)
+        for _ in range(3):                       # steady-state ticks
+            sched.step(0.0)
+        after = jit_cache_sizes(jits)
+    return {"events": evs,
+            "cache_sizes": [("paged_decode", before[0], after[0]),
+                            ("paged_prefill", before[1], after[1])]}
+
+
 # --------------------------------------------------------------------------
 # the registry
 # --------------------------------------------------------------------------
@@ -446,6 +531,18 @@ register_executable(ExecutableSpec(
     n_devices=8))
 
 register_executable(ExecutableSpec(
+    name="decode_paged/routed",
+    build=_build_decode_paged(local_routing=False),
+    expect={"no-collectives": {"nonzero": True}},
+    n_devices=8))
+
+register_executable(ExecutableSpec(
+    name="decode_paged/local",
+    build=_build_decode_paged(local_routing=True),
+    expect={"no-collectives": {"zero": True}},
+    n_devices=8))
+
+register_executable(ExecutableSpec(
     name="pallas_fused/fwd",
     build=_build_pallas_fused("fwd"),
     expect={"launch-count": {"max": 1}, "vmem-budget": _VMEM,
@@ -469,6 +566,12 @@ register_executable(ExecutableSpec(
             "dtype-flow": _DTYPE}))
 
 register_executable(ExecutableSpec(
+    name="flash_decode/paged",
+    build=_build_flash_decode_paged(),
+    expect={"launch-count": {"max": 1}, "vmem-budget": _VMEM,
+            "dtype-flow": _DTYPE}))
+
+register_executable(ExecutableSpec(
     name="model_loss/bf16",
     build=_build_bf16_loss(),
     expect={"dtype-flow": _DTYPE, "no-collectives": {"zero": True}}))
@@ -486,3 +589,10 @@ register_executable(ExecutableSpec(
         RuntimeError("scheduler/ticks is scenario-only")),
     expect={"host-sync": {}},
     scenario=_scheduler_scenario))
+
+register_executable(ExecutableSpec(
+    name="paged_scheduler/ticks",
+    build=lambda: (_ for _ in ()).throw(
+        RuntimeError("paged_scheduler/ticks is scenario-only")),
+    expect={"host-sync": {}},
+    scenario=_paged_scheduler_scenario))

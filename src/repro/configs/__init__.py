@@ -6,8 +6,9 @@ import importlib
 from typing import Dict
 
 from repro.configs.base import (GatingDropoutConfig, InputShape, INPUT_SHAPES,
-                                MLAConfig, ModelConfig, MoEConfig, SSMConfig,
-                                TrainConfig, reduced)
+                                MLAConfig, ModelConfig, MoEConfig,
+                                PagedKVConfig, SSMConfig, TrainConfig,
+                                reduced)
 
 _MODULES = {
     "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
@@ -57,6 +58,7 @@ def applicable_pairs():
 
 __all__ = [
     "ARCHS", "ASSIGNED_ARCHS", "INPUT_SHAPES", "InputShape", "GatingDropoutConfig",
-    "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig", "TrainConfig",
-    "applicable_pairs", "get_config", "reduced", "shape_applicable",
+    "MLAConfig", "ModelConfig", "MoEConfig", "PagedKVConfig", "SSMConfig",
+    "TrainConfig", "applicable_pairs", "get_config", "reduced",
+    "shape_applicable",
 ]

@@ -302,6 +302,34 @@ class ModelConfig:
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (serving, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PagedKVConfig:
+    """Block-table-addressed decode cache (vLLM-style page pool).
+
+    ``page_size`` logical positions per physical page (keep it a multiple
+    of 8 — the paged flash kernel's KV block is one page). ``n_pages`` is
+    the usable arena size (one extra scratch page is always appended);
+    0 derives it from the slot pool it replaces: ``n_slots_equiv *
+    ceil(seq_len / page_size)`` — equal paged-leaf KV bytes to an
+    ``n_slots_equiv``-row slot pool. ``prefix_caching`` shares full
+    prompt-prefix pages across requests via a token-hash page cache;
+    ``reserve_pages`` is the admission headroom (a request is admitted
+    only when its prompt pages + this reserve are free or evictable)."""
+    page_size: int = 16
+    n_pages: int = 0
+    n_slots_equiv: int = 8
+    prefix_caching: bool = True
+    reserve_pages: int = 1
+
+    def __post_init__(self):
+        assert self.page_size >= 1
+        assert self.reserve_pages >= 0
+
+
+# ---------------------------------------------------------------------------
 # Input shapes (assigned)
 # ---------------------------------------------------------------------------
 

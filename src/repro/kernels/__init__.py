@@ -6,7 +6,7 @@ per platform (platform.default_interpret, DESIGN.md §6): interpreter on
 CPU/GPU for correctness, compiled with MXU-aligned BlockSpecs on TPU.
 """
 from repro.kernels import ops, ref
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.grouped_ffn import grouped_matmul
 from repro.kernels.moe_dispatch import combine, dispatch
 from repro.kernels.moe_megakernel import fused_moe_ffn
@@ -14,5 +14,5 @@ from repro.kernels.platform import (default_interpret, force_interpret,
                                     resolve_interpret)
 
 __all__ = ["combine", "default_interpret", "dispatch", "flash_decode",
-           "force_interpret", "fused_moe_ffn", "grouped_matmul", "ops",
-           "ref", "resolve_interpret"]
+           "flash_decode_paged", "force_interpret", "fused_moe_ffn",
+           "grouped_matmul", "ops", "ref", "resolve_interpret"]

@@ -96,3 +96,73 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, index: jax.Array,
     (resolved before the jit boundary so the cached executable is keyed on
     the concrete mode)."""
     return _flash_decode_jit(q, k, v, index, bs, resolve_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# paged variant: block-table gather in the kernel prologue (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(idx_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, ps: int, scale: float):
+    # bt_ref is consumed by the BlockSpec index maps: grid step (b, g, j)
+    # DMAs physical page bt[b, j] of the arena into VMEM, so the kernel
+    # body is the plain online-softmax update over one page — logical
+    # position j*ps + i maps 1:1 onto the slot-row kernel's j*bs + i.
+    del bt_ref
+    _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            bs=ps, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _flash_decode_paged_jit(q, k, v, block_tables, index, interpret):
+    b, h, hd = q.shape
+    ps, kv = k.shape[1], k.shape[2]
+    nb = block_tables.shape[1]
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, hd)
+    grid = (b, kv, nb)
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, ps=ps, scale=hd ** -0.5),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, hd),
+                             lambda bi, g, j, idx, bt: (bi, g, 0, 0)),
+                pl.BlockSpec((1, ps, 1, hd),
+                             lambda bi, g, j, idx, bt: (bt[bi, j], 0, g, 0)),
+                pl.BlockSpec((1, ps, 1, hd),
+                             lambda bi, g, j, idx, bt: (bt[bi, j], 0, g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, hd),
+                                   lambda bi, g, j, idx, bt: (bi, g, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (b,)),
+      jnp.asarray(block_tables, jnp.int32), qg, k, v)
+    return out.reshape(b, h, hd)
+
+
+def flash_decode_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                       block_tables: jax.Array, index: jax.Array, *,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Paged flash decode: q (B, H, hd); k, v are the PHYSICAL PAGE ARENA
+    (n_pages + 1, page_size, KV, hd); ``block_tables`` (B, n_blocks) int32
+    maps each row's logical block j to its arena page; ``index`` (B,) is
+    each row's absolute position. The table rides the scalar-prefetch
+    channel, so the gather happens in the DMA prologue: grid step
+    (b, g, j) fetches page ``block_tables[b, j]`` — no materialized
+    per-row contiguous copy. Masking is the same ``pos <= index``
+    predicate as the slot-row kernel with logical ``pos = j * page_size +
+    offset``, so pages past a row's depth (scratch page, shared-tail
+    bytes) contribute exact-zero probability. The KV block equals one
+    page: keep ``page_size`` a multiple of 8 (ideally 128+ on the minor-2
+    dim) for TPU tiling. Returns (B, H, hd)."""
+    return _flash_decode_paged_jit(q, k, v, block_tables, index,
+                                   resolve_interpret(interpret))

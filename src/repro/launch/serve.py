@@ -36,10 +36,10 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config, reduced
+from repro.configs import PagedKVConfig, get_config, reduced
 from repro.models import init_model
-from repro.serve import (ContinuousScheduler, GenerateConfig, Request,
-                         make_generate_fn)
+from repro.serve import (ContinuousScheduler, GenerateConfig, PagedScheduler,
+                         Request, make_generate_fn, paged_kv_bytes)
 
 
 def synth_batch(cfg, key, batch: int, prompt_len: int):
@@ -120,6 +120,31 @@ def trace_comm_section(cfg, gen, sched, ep: int) -> dict:
     }
 
 
+def trace_cache_section(sched: PagedScheduler) -> dict:
+    """Paged-KV occupancy report for a --trace run: page/prefix stats
+    mirror the comm section's role for DESIGN.md §13 — what the arena
+    actually held vs what a slot pool would have pinned."""
+    lay = sched.layout
+    return {
+        "page_size": lay.page_size,
+        "n_pages": lay.n_pages,
+        "n_blocks": lay.n_blocks,
+        "peak_pages_in_use": sched.stats["peak_pages_in_use"],
+        "peak_kv_bytes": int(sched.stats["peak_pages_in_use"]
+                             * sched.page_bytes),
+        "arena_kv_bytes": int(paged_kv_bytes(sched.pool, sched.cfg))
+        if sched.pool is not None else 0,
+        "prefix_hit_rate": (sched.stats["prefix_hits"]
+                            / max(sched.stats["prefix_lookups"], 1)),
+        "prefix_hits": sched.stats["prefix_hits"],
+        "cow_copies": sched.stats["cow_copies"],
+        "preemptions": sched.stats["preemptions"],
+        "swap_ins": sched.stats["swap_ins"],
+        "mean_alive_slots": (float(np.mean(sched.alive_log))
+                             if sched.alive_log else 0.0),
+    }
+
+
 def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
     buckets = tuple(int(b) for b in args.buckets.split(","))
     # trace synthesis draws from the PROMPT stream; key_sample feeds only
@@ -127,10 +152,19 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
     # so prompt and sampling keys can never collide
     reqs = synth_trace(cfg, key_prompts, args.trace,
                        args.rate, buckets, gen.max_new)
-    sched = ContinuousScheduler(params, cfg, gen, n_slots=args.slots,
-                                prefill_buckets=buckets,
-                                admit_width=args.admit_width,
-                                rng=key_sample)
+    if args.paged:
+        paged = PagedKVConfig(page_size=args.page_size,
+                              n_pages=args.pages,
+                              prefix_caching=not args.no_prefix_cache)
+        sched = PagedScheduler(params, cfg, gen, paged=paged,
+                               n_slots=args.slots, prefill_buckets=buckets,
+                               admit_width=args.admit_width,
+                               rng=key_sample)
+    else:
+        sched = ContinuousScheduler(params, cfg, gen, n_slots=args.slots,
+                                    prefill_buckets=buckets,
+                                    admit_width=args.admit_width,
+                                    rng=key_sample)
     t0 = time.perf_counter()
     results = sched.run(reqs)
     wall = time.perf_counter() - t0
@@ -153,6 +187,8 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
     }
     if cfg.moe is not None:
         rec["comm"] = trace_comm_section(cfg, gen, sched, args.comm_ep)
+    if args.paged:
+        rec["cache"] = trace_cache_section(sched)
     return rec
 
 
@@ -210,6 +246,17 @@ def main():
                     help="admission group width (default min(4, slots))")
     ap.add_argument("--buckets", default="8,16,32,64",
                     help="prefill length buckets, comma-separated")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve --trace through the paged-KV scheduler "
+                         "(block-table decode cache, DESIGN.md §13)")
+    ap.add_argument("--page-size", type=int,
+                    default=PagedKVConfig.page_size,
+                    help="KV page size in tokens (--paged)")
+    ap.add_argument("--pages", type=int, default=PagedKVConfig.n_pages,
+                    help="physical page count (0 = n_slots_equiv full-"
+                         "length requests' worth, --paged)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix page caching (--paged)")
     ap.add_argument("--json-out", default=None,
                     help="write metrics JSON here")
     args = ap.parse_args()
@@ -255,6 +302,13 @@ def main():
                   f"{c['wire_bytes_total']/2**20:.2f} MiB wire over "
                   f"{c['n_ticks']} ticks; per-tick KiB p50/p90/p99: "
                   + "/".join(f"{pt[p]/2**10:.1f}" for p in (50, 90, 99)))
+        if "cache" in rec:
+            k = rec["cache"]
+            print(f"cache[paged {k['page_size']}tok]: peak "
+                  f"{k['peak_pages_in_use']}/{k['n_pages']} pages "
+                  f"({k['peak_kv_bytes']/2**20:.2f} MiB KV), prefix hit "
+                  f"rate {k['prefix_hit_rate']:.2f}, {k['cow_copies']} "
+                  f"COW, {k['preemptions']} preemptions")
         if args.json_out:
             with open(args.json_out, "w") as f:
                 json.dump(rec, f, indent=1)

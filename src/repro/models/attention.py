@@ -153,7 +153,9 @@ def init_ring_cache(cfg: ModelConfig, batch: int, window: int,
 def decode_self_attention(p: Params, x: jax.Array, cache: Params,
                           cfg: ModelConfig, index: jax.Array, *,
                           window: int = 0, use_rope: bool = True,
-                          flash: bool = False) -> Tuple[jax.Array, Params]:
+                          flash: bool = False,
+                          block_tables: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, Params]:
     """One-token decode. x: (B, 1, d); ``index`` = absolute position of the
     new token — a scalar (all rows at the same position) or a (B,) vector
     (slot-pool decode: every row at its own position). Ring-buffer cache
@@ -169,7 +171,20 @@ def decode_self_attention(p: Params, x: jax.Array, cache: Params,
     as the reference path's ``kv_valid``, so unwritten cache rows beyond
     each row's depth never contribute. Ring-buffer (windowed) layers keep
     the reference path: their validity depends on the ``pos`` leaf, not a
-    prefix mask."""
+    prefix mask.
+
+    ``block_tables`` (B, n_blocks) switches the full-cache path to PAGED
+    addressing (DESIGN.md §13): ``cache["k"]/["v"]`` are then a physical
+    page arena ``(n_pages + 1, page_size, KV, hd)`` shared by all B rows,
+    and row b's logical position p lives at arena slot
+    ``[block_tables[b, p // page_size], p % page_size]``. The new token is
+    written through the table, then the row's pages are gathered back into
+    a contiguous (B, n_blocks * page_size, ...) view guarded by the same
+    ``pos <= index`` predicate — positions past ``index`` (unwritten tail,
+    other requests' stale bytes on the scratch page) are masked to
+    exact-zero probability, so paged and slot-row reads are bitwise equal.
+    Requires per-row ``index``; windowed layers ignore the table (their
+    ring stays slot-addressed)."""
     index = jnp.asarray(index)
     per_row = index.ndim == 1
     b = x.shape[0]
@@ -203,6 +218,25 @@ def decode_self_attention(p: Params, x: jax.Array, cache: Params,
                                qpos=jnp.asarray(index)[None],
                                kpos=jnp.maximum(cpos, 0), kv_valid=valid)
         new_cache = {"k": ck, "v": cv, "pos": cpos}
+    elif block_tables is not None:
+        assert per_row, "paged decode requires per-row positions"
+        ps = cache["k"].shape[1]
+        nb = block_tables.shape[1]
+        page = jnp.take_along_axis(block_tables, (index // ps)[:, None],
+                                   axis=1)[:, 0]
+        off = index % ps
+        ck = cache["k"].at[page, off].set(k[:, 0])
+        cv = cache["v"].at[page, off].set(v[:, 0])
+        if flash:
+            from repro.kernels import flash_decode_paged
+            o = flash_decode_paged(q[:, 0], ck, cv, block_tables,
+                                   index)[:, None]
+        else:
+            gk = ck[block_tables].reshape((b, nb * ps) + ck.shape[2:])
+            gv = cv[block_tables].reshape((b, nb * ps) + cv.shape[2:])
+            valid = jnp.arange(nb * ps)[None, :] <= index[:, None]
+            o = full_attention(q, gk, gv, causal=False, kv_valid=valid)
+        new_cache = {"k": ck, "v": cv}
     else:
         s = cache["k"].shape[1]
         if per_row:

@@ -101,9 +101,17 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
 
 
 def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
-               index: jax.Array) -> Tuple[jax.Array, Params]:
+               index: jax.Array,
+               block_tables=None) -> Tuple[jax.Array, Params]:
     """Absorbed one-token decode against the compressed cache. ``index`` is
-    a scalar, or a (B,) vector for slot-pool decode (per-row positions)."""
+    a scalar, or a (B,) vector for slot-pool decode (per-row positions).
+
+    ``block_tables`` (B, n_blocks) switches to PAGED addressing (DESIGN.md
+    §13): the cache leaves are then page arenas ``(n_pages + 1, page_size,
+    c | dr)`` shared by all rows. The latent pair is written through the
+    table and the row's pages gathered back into a contiguous view; the
+    ``pos <= index`` mask zeroes everything past each row's depth exactly,
+    so the paged read is bitwise equal to the slot-row read."""
     m = cfg.mla
     dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
     index = jnp.asarray(index)
@@ -112,13 +120,30 @@ def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     q_nope, q_rope = _project_q(p, x, cfg, pos)            # (B,1,H,dn/(dr))
     c_new, kr_new = _compress_kv(p, x, cfg, pos)           # (B,1,c), (B,1,dr)
     smax = cache["c_kv"].shape[1]
-    if per_row:
+    if block_tables is not None:
+        assert per_row, "paged decode requires per-row positions"
+        ps = smax                                # arena: (P+1, ps, c | dr)
+        nb = block_tables.shape[1]
+        b = x.shape[0]
+        page = jnp.take_along_axis(block_tables, (index // ps)[:, None],
+                                   axis=1)[:, 0]
+        off = index % ps
+        c_arena = cache["c_kv"].at[page, off].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        r_arena = cache["k_rope"].at[page, off].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+        c_kv = c_arena[block_tables].reshape(b, nb * ps, -1)
+        k_rope = r_arena[block_tables].reshape(b, nb * ps, -1)
+        valid = jnp.arange(nb * ps)[None, :] <= index[:, None]    # (B, S)
+        new_cache = {"c_kv": c_arena, "k_rope": r_arena}
+    elif per_row:
         rows = jnp.arange(x.shape[0])
         c_kv = cache["c_kv"].at[rows, index].set(
             c_new[:, 0].astype(cache["c_kv"].dtype))
         k_rope = cache["k_rope"].at[rows, index].set(
             kr_new[:, 0].astype(cache["k_rope"].dtype))
         valid = jnp.arange(smax)[None, :] <= index[:, None]       # (B, S)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
     else:
         c_kv = jax.lax.dynamic_update_slice(
             cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
@@ -127,6 +152,7 @@ def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
             (0, index, 0))
         valid = jnp.broadcast_to(jnp.arange(smax) <= index,
                                  (x.shape[0], smax))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
     # absorb W_ukv(K) into the query
     w_k = p["w_ukv"][..., :dn]                             # (c, H, dn)
     w_v = p["w_ukv"][..., dn:]                             # (c, H, dv)
@@ -140,4 +166,4 @@ def mla_decode(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     lat = jnp.einsum("bhls,bsc->blhc", w, c_kv.astype(jnp.float32))
     o = jnp.einsum("blhc,chv->blhv", lat, w_v.astype(jnp.float32))
     y = jnp.einsum("blhv,hvd->bld", o.astype(p["wo"].dtype), p["wo"])
-    return y.astype(x.dtype), {"c_kv": c_kv, "k_rope": k_rope}
+    return y.astype(x.dtype), new_cache

@@ -249,7 +249,8 @@ def decode_step(params: Params, caches: List[Params], token: jax.Array,
                 rng: Optional[jax.Array] = None,
                 local_routing: bool = False,
                 token_valid: Optional[jax.Array] = None,
-                flash_decode: bool = False
+                flash_decode: bool = False,
+                block_tables: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, List[Params]]:
     """token: (B, 1) int32; index: absolute position of this token — scalar,
     or (B,) for slot-pool decode where every row sits at its own position.
@@ -259,7 +260,11 @@ def decode_step(params: Params, caches: List[Params], token: jax.Array,
     sharded backend's decode executable contains no all-to-all (DESIGN.md
     §9). ``token_valid`` (B,) masks rows (retired/empty pool slots) out of
     expert-capacity competition. ``flash_decode=True`` routes full-cache
-    attention reads through the kernels.flash_decode Pallas kernel."""
+    attention reads through the kernels.flash_decode Pallas kernel.
+    ``block_tables`` (B, n_blocks) switches full-length attention caches
+    to paged (page-arena) addressing (DESIGN.md §13); positions in the
+    table are META-INCLUSIVE logical positions — the same space as ``idx``
+    below — so callers build tables over ``max_seq + n_meta`` positions."""
     segs = T.layer_plan(cfg)
     x = L.embed_apply(params["embed"], token).astype(cfg.dtype)
     n_meta = cfg.hybrid.n_meta_tokens if cfg.hybrid is not None else 0
@@ -271,6 +276,7 @@ def decode_step(params: Params, caches: List[Params], token: jax.Array,
                                  rng=rng, decision=bool(local_routing),
                                  is_training=False, token_ids=token,
                                  token_valid=token_valid,
-                                 flash_decode=flash_decode)
+                                 flash_decode=flash_decode,
+                                 block_tables=block_tables)
     x = L.norm_apply(params["final_norm"], x, cfg)
     return _logits(params, x, cfg, ctx), caches

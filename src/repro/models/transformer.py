@@ -231,8 +231,9 @@ def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
                  index, rng, decision, is_training: bool,
                  cross_src: Optional[jax.Array], token_ids,
                  token_valid=None,
-                 flash_decode: bool = False) -> Tuple[jax.Array,
-                                                      Optional[Params], Dict]:
+                 flash_decode: bool = False,
+                 block_tables=None) -> Tuple[jax.Array,
+                                             Optional[Params], Dict]:
     """One transformer layer. Returns (x, new_cache, aux)."""
     new_cache: Params = {}
     b, l, d = x.shape
@@ -242,9 +243,12 @@ def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
         outs = []
         if spec.mixer in ("gqa", "hybrid"):
             if mode == "decode":
+                # windowed layers keep their slot-addressed ring cache;
+                # only full-cache layers read through the page table
                 o, nc = A.decode_self_attention(
                     p["attn"], h, cache["attn"], cfg, index,
-                    window=spec.window, flash=flash_decode)
+                    window=spec.window, flash=flash_decode,
+                    block_tables=None if spec.window > 0 else block_tables)
                 new_cache["attn"] = nc
             else:
                 q, k, v = A.attn_qkv(p["attn"], h)
@@ -268,7 +272,8 @@ def _layer_apply(spec: LayerSpec, p: Params, x: jax.Array, cfg: ModelConfig,
             outs.append(o)
         if spec.mixer == "mla":
             if mode == "decode":
-                o, nc = M.mla_decode(p["attn"], h, cache["attn"], cfg, index)
+                o, nc = M.mla_decode(p["attn"], h, cache["attn"], cfg, index,
+                                     block_tables=block_tables)
                 new_cache["attn"] = nc
             else:
                 o, (c_kv, k_rope) = M.mla_attention(p["attn"], h, cfg,
@@ -421,7 +426,7 @@ def apply_stack(params: List[Params], segs: List[Segment], x: jax.Array,
                 caches: Optional[List[Params]] = None,
                 index=None, rng=None, decision=None, is_training=True,
                 cross_src=None, token_ids=None, token_valid=None,
-                flash_decode=False):
+                flash_decode=False, block_tables=None):
     """Run all segments. Returns (x, new_caches, aux_sum)."""
     new_caches: List[Params] = []
     aux_total = None
@@ -443,7 +448,7 @@ def apply_stack(params: List[Params], segs: List[Segment], x: jax.Array,
                     index=index, rng=lrng, decision=decision,
                     is_training=is_training, cross_src=cross_src,
                     token_ids=token_ids, token_valid=token_valid,
-                    flash_decode=flash_decode)
+                    flash_decode=flash_decode, block_tables=block_tables)
                 if nc is not None:
                     nc_out[f"p{pi}"] = nc
                 aux_acc = aux if aux_acc is None else jax.tree.map(

@@ -308,12 +308,24 @@ def _advance(gen: GenerateConfig, nxt, lp, done, length, score):
 # greedy / sampling loop — thin driver over the slot-pool primitives
 # ---------------------------------------------------------------------------
 
+def _check_cache_budget(max_seq: int, prompt_len: int, max_new: int):
+    """The decode cache is pinned at ``max_seq`` positions; a request that
+    could outgrow it would silently wrap ``.at[index]`` writes back into
+    live positions and corrupt every later read. Fail loudly instead."""
+    if max_seq < prompt_len + max_new:
+        raise ValueError(
+            f"prompt_len ({prompt_len}) + max_new ({max_new}) = "
+            f"{prompt_len + max_new} exceeds the pinned cache length "
+            f"max_seq={max_seq}; raise GenerateConfig.max_seq (or lower "
+            f"max_new) — the cache cannot grow after allocation")
+
+
 def _generate_sample(params, batch, rng, cfg: ModelConfig,
                      gen: GenerateConfig, ctx) -> GenerateResult:
     prompt_len = batch["tokens"].shape[1]
     b = batch["tokens"].shape[0]
     max_seq = gen.max_seq or (prompt_len + gen.max_new)
-    assert max_seq >= prompt_len + gen.max_new, (max_seq, prompt_len)
+    _check_cache_budget(max_seq, prompt_len, gen.max_new)
     seeds = jnp.arange(b, dtype=jnp.int32)
     lengths = jnp.full((b,), prompt_len, jnp.int32)
     # every prompt row is a slot, all admitted at step 0: the pool is
@@ -370,7 +382,7 @@ def _generate_beam(params, batch, rng, cfg: ModelConfig,
     # Tile every prompt to W identical rows; prefill at B*W so every cache
     # leaf already carries the beam-expanded batch axis.
     max_seq = gen.max_seq or (prompt_len + gen.max_new)
-    assert max_seq >= prompt_len + gen.max_new, (max_seq, prompt_len)
+    _check_cache_budget(max_seq, prompt_len, gen.max_new)
     tiled = {k: jnp.repeat(v, W, axis=0) for k, v in batch.items()}
     logits0, caches = prefill(params, tiled, cfg, ctx, max_seq=max_seq)
     logp0 = jax.nn.log_softmax(logits0[:, 0].astype(jnp.float32), -1)

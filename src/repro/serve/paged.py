@@ -1,0 +1,428 @@
+"""Paged KV cache: page arena + block tables + host page allocator
+(vLLM-style, DESIGN.md §13).
+
+The slot pool (engine.init_slot_pool) reserves a full fixed-``max_seq``
+cache row per request slot, so short requests strand most of their
+reservation. This module replaces the SLOT axis of every full-length
+attention-cache leaf with a PHYSICAL PAGE axis:
+
+  slot pool  : (repeats, n_slots + 1, seq_len, ...)   one row per slot
+  page arena : (repeats, n_pages + 1, page_size, ...) pages shared by all
+
+A request's logical position p lives at arena slot ``[table[p // ps],
+p % ps]`` where ``table`` is its (n_blocks,) block-table row, host-managed
+by ``PageAllocator`` (refcounted — prefix sharing and copy-on-write need
+pages with multiple owners). Arena index ``n_pages`` is a SCRATCH page:
+dead slots' tables point every block at it, and prefill write-tables send
+shared/beyond-prompt blocks there, so no extra masking plumbing exists —
+scratch bytes are only ever read at positions the ``pos <= index``
+predicate already masks to exact-zero probability.
+
+Which leaves page is discovered STRUCTURALLY (`_cache_page_axes`), the
+same eval_shape-diff trick as ``engine._cache_batch_axes``: leaves whose
+shape tracks ``max_seq`` (full GQA KV, MLA latents) page; leaves that
+don't (sliding-window rings + their ``pos`` leaf, SSM state, cross-KV)
+keep the slot-pool layout — both layouts coexist in one cache pytree and
+one decode executable.
+
+Exactness: paged decode is BITWISE equal to slot-pool decode. Cache
+writes happen BEFORE the attention read (write-then-attend), gathers are
+copies, and every position past a row's depth — unwritten tail, scratch
+bytes, a shared page's stale suffix — scores ``NEG_INF`` whose
+``exp(NEG_INF - m)`` underflows to exactly 0.0, contributing exact-zero
+terms to the same-shaped softmax reduction. ``tests/test_paged.py``
+asserts the parity; ``benchmarks/table10_paged.py`` asserts it per
+request on the table8 long-tail trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+from repro.serve.engine import _cache_batch_axes
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# structural discovery: which cache leaves page
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _cache_page_axes(cfg: ModelConfig):
+    """(batch_axes, seq_axes) leaf-aligned trees for the decode cache.
+
+    ``seq_ax >= 0`` marks a PAGEABLE leaf (its shape tracks ``max_seq``);
+    found by diffing ``init_cache`` leaf shapes at two cache lengths under
+    ``eval_shape`` — ring buffers (sized by window), SSM state, cross-KV
+    and the ring ``pos`` leaf don't move and stay slot-addressed. Pageable
+    leaves are asserted to carry ``seq_ax == batch_ax + 1`` (the layout
+    ``(repeats, batch, seq, ...)`` every attention cache family uses)."""
+    a = jax.eval_shape(lambda: init_cache(cfg, 2, 16))
+    b = jax.eval_shape(lambda: init_cache(cfg, 2, 24))
+
+    def axis(sa, sb):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        assert len(diff) <= 1, (sa.shape, sb.shape)
+        return diff[0] if diff else -1
+
+    seq = jax.tree.map(axis, a, b)
+    bat = _cache_batch_axes(cfg)
+    jax.tree.map(lambda ab, as_: None if as_ < 0 else
+                 (_ for _ in ()).throw(AssertionError((ab, as_)))
+                 if not (ab >= 0 and as_ == ab + 1) else None, bat, seq)
+    return bat, seq
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of a page arena (hashable — part of jit cache keys).
+
+    ``seq_len`` is the META-INCLUSIVE logical cache length (``max_seq +
+    n_meta_tokens``); ``n_blocks = ceil(seq_len / page_size)`` is every
+    block table's width. Arena leaves carry ``n_pages + 1`` pages — the
+    last one (index ``n_pages``) is the shared scratch page."""
+    page_size: int
+    n_pages: int
+    seq_len: int
+
+    @property
+    def n_blocks(self) -> int:
+        return ceil_div(self.seq_len, self.page_size)
+
+    @property
+    def scratch(self) -> int:
+        return self.n_pages
+
+    def pages_for(self, n_positions: int) -> int:
+        """Pages holding logical positions [0, n_positions)."""
+        return ceil_div(n_positions, self.page_size)
+
+
+def make_layout(cfg: ModelConfig, max_seq: int, page_size: int,
+                n_pages: int) -> PagedLayout:
+    n_meta = cfg.hybrid.n_meta_tokens if cfg.hybrid is not None else 0
+    return PagedLayout(page_size=page_size, n_pages=n_pages,
+                       seq_len=max_seq + n_meta)
+
+
+# ---------------------------------------------------------------------------
+# host-side page allocator (refcounted)
+# ---------------------------------------------------------------------------
+
+class PagePoolExhausted(RuntimeError):
+    pass
+
+
+class PageAllocator:
+    """Free-list page allocator with per-page refcounts.
+
+    ``alloc`` hands out the lowest-numbered free page (deterministic
+    schedules => deterministic placement, which the parity benchmarks
+    rely on for reproducibility); ``incref`` adds an owner (prefix-cache
+    entry, sharing request); ``decref`` releases one and returns the page
+    to the free list at refcount zero. Double-free and use-after-free are
+    hard errors — ``tests/test_paged.py`` fuzzes these invariants."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 1
+        self.n_pages = n_pages
+        self._free = deque(range(n_pages))
+        self._ref = np.zeros(n_pages, np.int64)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def in_use(self) -> int:
+        return int((self._ref > 0).sum())
+
+    def ref(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def try_alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        page = self._free.popleft()
+        assert self._ref[page] == 0, (page, self._ref[page])
+        self._ref[page] = 1
+        return page
+
+    def alloc(self) -> int:
+        page = self.try_alloc()
+        if page is None:
+            raise PagePoolExhausted(
+                f"all {self.n_pages} KV pages are referenced")
+        return page
+
+    def incref(self, page: int):
+        if self._ref[page] <= 0:
+            raise RuntimeError(f"incref on free page {page}")
+        self._ref[page] += 1
+
+    def decref(self, page: int):
+        if self._ref[page] <= 0:
+            raise RuntimeError(f"double free of page {page}")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+
+    def check(self):
+        """Conservation invariant: every page is free xor referenced."""
+        assert (self._ref >= 0).all()
+        held = int((self._ref > 0).sum())
+        assert held + len(self._free) == self.n_pages, \
+            (held, len(self._free), self.n_pages)
+        assert len(set(self._free)) == len(self._free)
+
+
+# ---------------------------------------------------------------------------
+# token-hash prefix cache (host)
+# ---------------------------------------------------------------------------
+
+class PrefixCache:
+    """LRU map from token-prefix keys to physical page lists.
+
+    Two key families: ``("PG", f, prefix_bytes)`` — the first ``f`` FULL
+    pages of a prompt whose page-covered token prefix hashes to
+    ``prefix_bytes`` (page content at position p depends only on tokens
+    <= p by causality, so equal prefixes => bitwise-equal pages); and
+    ``("FULL", n, prompt_bytes)`` — a whole prompt including its partial
+    tail page, so identical prompts share everything and the first
+    divergent DECODE write triggers copy-on-write. The cache holds one
+    refcount per page per entry; eviction (LRU, on allocation pressure)
+    just decrefs — pages still owned by live requests survive until their
+    last owner retires."""
+
+    def __init__(self, alloc: PageAllocator):
+        self._alloc = alloc
+        self._entries: "OrderedDict[Tuple, List[int]]" = OrderedDict()
+        self.hits = 0
+        self.lookups = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key) -> Optional[List[int]]:
+        pages = self._entries.get(key)
+        if pages is not None:
+            self._entries.move_to_end(key)
+        return pages
+
+    def put(self, key, pages: List[int]):
+        if key in self._entries:
+            return
+        for p in pages:
+            self._alloc.incref(p)
+        self._entries[key] = list(pages)
+
+    def evict_one(self) -> bool:
+        """Drop the LRU entry; True if any entry was dropped."""
+        if not self._entries:
+            return False
+        _, pages = self._entries.popitem(last=False)
+        for p in pages:
+            self._alloc.decref(p)
+        return True
+
+    def evictable_pages(self) -> int:
+        """Pages that would return to the free list if every entry were
+        evicted: referenced only by cache entries, not by any slot."""
+        cref: Dict[int, int] = {}
+        for pages in self._entries.values():
+            for p in pages:
+                cref[p] = cref.get(p, 0) + 1
+        return sum(1 for p, c in cref.items() if self._alloc.ref(p) == c)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+# ---------------------------------------------------------------------------
+# device-side paged pool primitives
+# ---------------------------------------------------------------------------
+
+def paged_pool_like(params, batch, cfg: ModelConfig, ctx=None, *,
+                    max_seq: int, n_slots: int, layout: PagedLayout):
+    """Paged decode pool shaped like the caches ``prefill`` will ACTUALLY
+    produce for ``batch`` (cross-KV length follows the conditioning
+    inputs, mirroring ``engine.slot_pool_like``). Pageable leaves become
+    page arenas ``(..., n_pages + 1, page_size, ...)``; everything else
+    keeps the slot-pool layout over ``n_slots`` rows (callers include the
+    scratch slot). Shape-only (``eval_shape``): no compute."""
+    _, fresh = jax.eval_shape(
+        lambda p, b: prefill(p, b, cfg, ctx, max_seq=max_seq),
+        params, batch)
+    bat, seq = _cache_page_axes(cfg)
+
+    def alloc(fr, ab, as_):
+        if as_ >= 0:
+            assert fr.shape[as_] == layout.seq_len, \
+                (fr.shape, as_, layout.seq_len)
+            shape = list(fr.shape)
+            shape[ab] = layout.n_pages + 1
+            shape[as_] = layout.page_size
+            return jnp.zeros(tuple(shape), fr.dtype)
+        if ab >= 0:
+            shape = fr.shape[:ab] + (n_slots,) + fr.shape[ab + 1:]
+        else:
+            shape = fr.shape[:1] + (n_slots,) + fr.shape[1:]
+        return jnp.zeros(shape, fr.dtype)
+
+    return jax.tree.map(alloc, fresh, bat, seq)
+
+
+def _put_slot_rows(pool_leaf, fresh_leaf, ax, slots):
+    """engine._scatter_slots semantics for one slot-addressed leaf."""
+    n = slots.shape[0]
+    pool_ax = ax if ax >= 0 else 1
+    if ax >= 0:
+        rows = jnp.moveaxis(fresh_leaf, ax, 0).astype(pool_leaf.dtype)
+    else:
+        rows = jnp.broadcast_to(fresh_leaf.astype(pool_leaf.dtype),
+                                (n,) + fresh_leaf.shape)
+    out = jnp.moveaxis(pool_leaf, pool_ax, 0).at[slots].set(rows)
+    return jnp.moveaxis(out, 0, pool_ax)
+
+
+def scatter_pages(pool, fresh, cfg: ModelConfig, write_tables, slot_rows,
+                  layout: PagedLayout):
+    """Write per-request prefill caches into the paged pool.
+
+    ``write_tables`` (W, n_blocks) int32 routes each request's logical
+    block to its DESTINATION page — entries pointing at the scratch page
+    skip the write in effect (shared prefix pages whose content already
+    exists, blocks past the request's allocation, dummy admission rows).
+    ``slot_rows`` (W,) routes the slot-addressed leaves exactly as
+    ``engine._scatter_slots`` does (scratch slot for dummies)."""
+    bat, seq = _cache_page_axes(cfg)
+    ps, nb = layout.page_size, layout.n_blocks
+    w = write_tables.shape[0]
+    flat = write_tables.reshape(-1)
+
+    def put(pool_leaf, fr, ab, as_):
+        if as_ < 0:
+            return _put_slot_rows(pool_leaf, fr, ab, slot_rows)
+        assert ab == 1 and as_ == 2, (ab, as_)
+        rep = fr.shape[0]
+        rest = fr.shape[3:]
+        pad = nb * ps - fr.shape[2]
+        f = jnp.pad(fr, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * len(rest)) \
+            if pad else fr
+        f = f.reshape((rep, w, nb, ps) + rest)
+        f = jnp.moveaxis(f, (1, 2), (0, 1))          # (W, nb, rep, ps, ...)
+        f = f.reshape((w * nb, rep, ps) + rest).astype(pool_leaf.dtype)
+        arena = jnp.moveaxis(pool_leaf, 1, 0).at[flat].set(f)
+        return jnp.moveaxis(arena, 0, 1)
+
+    return jax.tree.map(put, pool, fresh, bat, seq)
+
+
+def prefill_into_pages(params, batch: Dict[str, Any], lengths: jax.Array,
+                       write_tables: jax.Array, slot_rows: jax.Array, pool,
+                       cfg: ModelConfig, ctx=None, *, max_seq: int,
+                       layout: PagedLayout,
+                       rng: Optional[jax.Array] = None):
+    """Prefill a group of new requests into their allocated pages.
+
+    The full prompt is always COMPUTED (prefix caching saves cache
+    MEMORY, not prefill FLOPs — a shared page is simply not re-written,
+    keeping the cached bytes pristine for its other owners); the
+    write-table decides which produced blocks land in the arena. Returns
+    ``(logits (W, V) at each row's last real token, pool')``."""
+    logits, fresh = prefill(params, batch, cfg, ctx, max_seq=max_seq,
+                            rng=rng, last_index=lengths - 1)
+    pool = scatter_pages(pool, fresh, cfg, write_tables, slot_rows, layout)
+    return logits[:, 0], pool
+
+
+def decode_paged_step(params, pool, block_tables: jax.Array,
+                      tok: jax.Array, pos: jax.Array, alive: jax.Array,
+                      cfg: ModelConfig, ctx=None, *,
+                      local_routing: bool = False,
+                      flash_decode: bool = False):
+    """One batched paged ``decode_step`` over all S block-table rows at
+    per-row positions — the paged twin of ``engine.decode_pool_step`` and
+    the ONE decode executable of a paged serving process."""
+    lg, pool = decode_step(params, pool, tok[:, None], pos, cfg, ctx,
+                           local_routing=local_routing, token_valid=alive,
+                           flash_decode=flash_decode,
+                           block_tables=block_tables)
+    return lg[:, 0], pool
+
+
+def copy_pages(pool, cfg: ModelConfig, src: jax.Array, dst: jax.Array):
+    """Copy-on-write: duplicate arena pages ``src[i] -> dst[i]`` on every
+    pageable leaf (a page copy IS bitwise — the COW'd owner keeps exactly
+    the bytes it would have had unshared). Callers pad ``src``/``dst``
+    with scratch->scratch pairs to a fixed width so the executable count
+    stays bounded."""
+    bat, seq = _cache_page_axes(cfg)
+
+    def cp(leaf, ab, as_):
+        del ab
+        if as_ < 0:
+            return leaf
+        return leaf.at[:, dst].set(leaf[:, src])
+
+    return jax.tree.map(cp, pool, bat, seq)
+
+
+def gather_slot_state(pool, cfg: ModelConfig, table_row: jax.Array,
+                      slot: jax.Array):
+    """Swap-out reads (preemption): a slot's pages gathered page-major
+    ``(repeats, n_blocks, page_size, ...)`` plus its slot-addressed leaf
+    rows. jax arrays are immutable, so the gather is consistent even
+    though the host frees the pages immediately after."""
+    bat, seq = _cache_page_axes(cfg)
+
+    def g(leaf, ab, as_):
+        if as_ >= 0:
+            return leaf[:, table_row]
+        pool_ax = ab if ab >= 0 else 1
+        return jnp.take(leaf, slot, axis=pool_ax)
+
+    return jax.tree.map(g, pool, bat, seq)
+
+
+def restore_slot_state(pool, cfg: ModelConfig, saved, table_row: jax.Array,
+                       slot: jax.Array):
+    """Swap-in writes: the inverse of ``gather_slot_state`` against a
+    FRESH page allocation (``table_row``). Values round-trip bitwise —
+    preemption via swap preserves per-request output parity, which
+    recompute-style preemption could not guarantee."""
+    bat, seq = _cache_page_axes(cfg)
+
+    def r(leaf, sv, ab, as_):
+        sv = jnp.asarray(sv, leaf.dtype)
+        if as_ >= 0:
+            arena = jnp.moveaxis(leaf, 1, 0)
+            rows = jnp.moveaxis(sv, 1, 0)            # (nb, rep, ps, ...)
+            return jnp.moveaxis(arena.at[table_row].set(rows), 0, 1)
+        pool_ax = ab if ab >= 0 else 1
+        m = jnp.moveaxis(leaf, pool_ax, 0)
+        return jnp.moveaxis(m.at[slot].set(sv), 0, pool_ax)
+
+    return jax.tree.map(r, pool, saved, bat, seq)
+
+
+def paged_kv_bytes(pool, cfg: ModelConfig) -> int:
+    """Total bytes of the PAGEABLE leaves of ``pool`` (the memory the
+    page arena actually pins — the --trace cache section reports this)."""
+    bat, seq = _cache_page_axes(cfg)
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda leaf, ab, as_: leaf.size * leaf.dtype.itemsize
+        if as_ >= 0 else 0, pool, bat, seq))
+    return int(sum(leaves))

@@ -46,10 +46,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PagedKVConfig
 from repro.serve.engine import (GenerateConfig, _check_local_routing,
                                 _select_rows, decode_pool_step,
                                 prefill_into_slots, slot_pool_like)
+from repro.serve.paged import (PageAllocator, PagedLayout, PagePoolExhausted,
+                               PrefixCache, _cache_page_axes, ceil_div,
+                               copy_pages, decode_paged_step,
+                               gather_slot_state, paged_kv_bytes,
+                               paged_pool_like, prefill_into_pages,
+                               restore_slot_state)
 
 
 @dataclasses.dataclass
@@ -187,6 +193,9 @@ class ContinuousScheduler:
         # accounting feed: launch/serve.py --trace prices each tick with
         # the substrate bytes model (comm/cost.py, DESIGN.md §10)
         self.tick_log: List[Tuple[str, int]] = []
+        # live-slot count per decode tick: the sustained-concurrency
+        # series benchmarks/table10_paged.py compares across cache layouts
+        self.alive_log: List[int] = []
         self._slot_uses = np.zeros(n_slots, np.int64)
         self._prefill = _bucket_prefill_fn(cfg, gen, ctx, self.max_seq)
         self._decode_fn = _pool_decode_fn(cfg, gen, ctx)
@@ -198,17 +207,25 @@ class ContinuousScheduler:
 
     def submit(self, req: Request):
         assert req.tokens.ndim == 1
-        if not self.exact_prefill:
-            assert len(req.tokens) <= self.buckets[-1], \
-                f"prompt {len(req.tokens)} exceeds largest bucket"
+        if not self.exact_prefill and len(req.tokens) > self.buckets[-1]:
+            raise ValueError(
+                f"prompt length {len(req.tokens)} exceeds the largest "
+                f"prefill bucket {self.buckets[-1]}; add a larger bucket "
+                f"at scheduler init")
         budget = req.max_new or self.gen.max_new
-        assert budget <= self.gen.max_new
+        if budget > self.gen.max_new:
+            raise ValueError(
+                f"request max_new {budget} exceeds the scheduler's "
+                f"GenerateConfig.max_new {self.gen.max_new}")
         # holds for bucketed admission by construction (bucket + max_new
         # <= max_seq); the exact-prefill path (SSM/oversized-window) has
-        # no bucket cap, and an overflow would silently drop cache writes
-        assert len(req.tokens) + budget <= self.max_seq, \
-            f"prompt {len(req.tokens)} + budget {budget} exceeds pool " \
-            f"max_seq {self.max_seq}; raise max_seq= at scheduler init"
+        # no bucket cap, and an overflow would silently wrap cache writes
+        # back into live positions — fail loudly up front instead
+        if len(req.tokens) + budget > self.max_seq:
+            raise ValueError(
+                f"prompt {len(req.tokens)} + budget {budget} exceeds the "
+                f"pinned pool cache length max_seq={self.max_seq}; raise "
+                f"max_seq= at scheduler init — the pool cannot grow")
         self._queue.append(req)
         self._reqs[req.rid] = req
         self._meta[req.rid] = {"arrival": req.arrival}
@@ -247,6 +264,13 @@ class ContinuousScheduler:
         return (self.gen.eos_id >= 0 and tok == self.gen.eos_id) \
             or ngen >= budget
 
+    def _can_admit(self, req: Request) -> bool:
+        """Admission gate hook beyond slot availability — the base
+        scheduler admits whenever a slot is free; the paged scheduler
+        overrides this with free-page accounting (reserving the pages as
+        a side effect, so a True answer cannot fail later)."""
+        return True
+
     def _admit(self, now: float):
         while self._free and self._queue \
                 and self._queue[0].arrival <= now:
@@ -254,6 +278,8 @@ class ContinuousScheduler:
             # queue prefix for same-bucket peers so admission groups fill
             # up instead of fragmenting into per-request prefills (the
             # head request is always admitted — no starvation)
+            if not self._can_admit(self._queue[0]):
+                break                     # backpressure: keep FIFO order
             bucket = self._bucket(len(self._queue[0].tokens))
             group: List[Request] = []
             skipped: List[Request] = []
@@ -261,7 +287,8 @@ class ContinuousScheduler:
                    and len(group) < len(self._free)
                    and self._queue[0].arrival <= now):
                 r = self._queue.popleft()
-                if self._bucket(len(r.tokens)) == bucket:
+                if self._bucket(len(r.tokens)) == bucket \
+                        and (group == [] or self._can_admit(r)):
                     group.append(r)
                 else:
                     skipped.append(r)
@@ -271,10 +298,12 @@ class ContinuousScheduler:
                 break
             self._prefill_group(group, bucket, now)
 
-    def _prefill_group(self, group: List[Request], bucket: int, now: float):
-        # pad the group to the next power-of-two width (<= admit_width):
-        # mid-flight single-slot refills cost a width-1 prefill, not a
-        # full admit_width one; compile count stays O(buckets * log W)
+    def _stage_group(self, group: List[Request], bucket: int):
+        """Host-side admission staging shared by the slot-pool and paged
+        schedulers: pad the group to the next power-of-two width (<=
+        admit_width) so mid-flight single-slot refills cost a width-1
+        prefill, not a full admit_width one (compile count stays
+        O(buckets * log W)); assign freed slots; build the device batch."""
         W = 1
         while W < len(group):
             W *= 2
@@ -301,22 +330,29 @@ class ContinuousScheduler:
                                 rows.dtype)
                 rows = np.concatenate([rows, fill], 0)
             batch[k] = jnp.asarray(rows)
+        self._ensure_pool(batch)
+        return W, lengths, slots, seeds, batch
+
+    def _alloc_pool(self, batch):
+        return slot_pool_like(self.params, batch, self.cfg, self.ctx,
+                              max_seq=self.max_seq,
+                              n_slots=self.n_slots + 1)
+
+    def _ensure_pool(self, batch):
         shapes = {k: tuple(v.shape[1:]) for k, v in batch.items()
                   if k != "tokens"}
         if self.pool is None:
             self._extras_shapes = shapes
-            self.pool = slot_pool_like(self.params, batch, self.cfg,
-                                       self.ctx, max_seq=self.max_seq,
-                                       n_slots=self.n_slots + 1)
+            self.pool = self._alloc_pool(batch)
         else:
             assert shapes == self._extras_shapes, \
                 "every request of a serving process must carry the same " \
                 f"conditioning shapes: {shapes} != {self._extras_shapes}"
-        pool, tok0, lp0 = self._prefill(
-            self.params, batch, jnp.asarray(lengths), jnp.asarray(slots),
-            self.pool, self.rng, jnp.asarray(seeds))
-        self.pool = pool
-        tok0, lp0 = jax.device_get((tok0, lp0))   # the tick's one sync
+
+    def _finish_admission(self, group: List[Request], bucket: int, W: int,
+                          lengths, slots, seeds, tok0, lp0, now: float):
+        """Per-slot host bookkeeping once the admission prefill's first
+        tokens are on the host."""
         t_first = self._now()
         for i, req in enumerate(group):
             s = int(slots[i])
@@ -340,15 +376,36 @@ class ContinuousScheduler:
             self.stats["max_concurrent"],
             int(self._active[:self.n_slots].sum()))
 
-    def _decode_tick(self):
-        alive = self._active & ~self._done
-        if not alive[:self.n_slots].any():
-            return
+    def _prefill_group(self, group: List[Request], bucket: int, now: float):
+        W, lengths, slots, seeds, batch = self._stage_group(group, bucket)
+        pool, tok0, lp0 = self._prefill(
+            self.params, batch, jnp.asarray(lengths), jnp.asarray(slots),
+            self.pool, self.rng, jnp.asarray(seeds))
+        self.pool = pool
+        tok0, lp0 = jax.device_get((tok0, lp0))   # the tick's one sync
+        self._finish_admission(group, bucket, W, lengths, slots, seeds,
+                               tok0, lp0, now)
+
+    def _decode_call(self, alive):
+        """Launch the pool decode executable (overridden by the paged
+        scheduler to feed block tables); returns (nxt, lp) device arrays
+        and reassigns ``self.pool``."""
         pool, nxt, lp = self._decode_fn(
             self.params, self.pool, jnp.asarray(self._tok),
             jnp.asarray(self._pos), jnp.asarray(alive), self.rng,
             jnp.asarray(self._seed), jnp.asarray(self._ngen))
         self.pool = pool
+        return nxt, lp
+
+    def _decode_tick(self):
+        alive = self._active & ~self._done
+        if not alive[:self.n_slots].any():
+            return
+        nxt, lp = self._decode_call(alive)
+        # recompute: paged page-exhaustion preemption can deactivate slots
+        # inside the decode call (their rows decode dead, outputs ignored)
+        alive = self._active & ~self._done
+        self.alive_log.append(int(alive[:self.n_slots].sum()))
         nxt, lp = jax.device_get((nxt, lp))       # the tick's one sync
         for s in range(self.n_slots):
             if not alive[s]:
@@ -396,6 +453,445 @@ class ContinuousScheduler:
             results.extend(self.step(now))
         results.extend(self._retire(self._now()))
         return sorted(results, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# paged scheduler (block-table addressed KV, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _paged_decode_fn(cfg: ModelConfig, gen: GenerateConfig, ctx):
+    """THE decode executable of a paged serving process — the slot-pool
+    twin of `_pool_decode_fn` plus the block-table operand."""
+    @jax.jit
+    def step(params, pool, tables, tok, pos, alive, rng, seeds, steps):
+        lg, pool = decode_paged_step(params, pool, tables, tok, pos, alive,
+                                     cfg, ctx,
+                                     local_routing=gen.local_routing,
+                                     flash_decode=gen.flash_decode)
+        nxt, lp = _select_rows(gen, lg.astype(jnp.float32), rng, seeds,
+                               steps)
+        return pool, nxt, lp
+
+    return step
+
+
+@functools.lru_cache(maxsize=32)
+def _paged_prefill_fn(cfg: ModelConfig, gen: GenerateConfig, ctx,
+                      max_seq: int, layout: PagedLayout):
+    @jax.jit
+    def pf(params, batch, lengths, write_tables, slot_rows, pool, rng,
+           seeds):
+        logits, pool = prefill_into_pages(
+            params, batch, lengths, write_tables, slot_rows, pool, cfg,
+            ctx, max_seq=max_seq, layout=layout)
+        tok0, lp0 = _select_rows(gen, logits.astype(jnp.float32), rng,
+                                 seeds, jnp.zeros(lengths.shape, jnp.int32))
+        return pool, tok0, lp0
+
+    return pf
+
+
+@functools.lru_cache(maxsize=8)
+def _copy_pages_fn(cfg: ModelConfig):
+    @jax.jit
+    def cp(pool, src, dst):
+        return copy_pages(pool, cfg, src, dst)
+
+    return cp
+
+
+@functools.lru_cache(maxsize=8)
+def _gather_slot_fn(cfg: ModelConfig):
+    @jax.jit
+    def g(pool, table_row, slot):
+        return gather_slot_state(pool, cfg, table_row, slot)
+
+    return g
+
+
+@functools.lru_cache(maxsize=8)
+def _restore_slot_fn(cfg: ModelConfig):
+    @jax.jit
+    def r(pool, saved, table_row, slot):
+        return restore_slot_state(pool, cfg, saved, table_row, slot)
+
+    return r
+
+
+@dataclasses.dataclass
+class _SwapState:
+    """Host snapshot of a preempted slot: the per-slot scheduler scalars
+    plus the device cache state (its pages, page-major, and its
+    slot-addressed leaf rows) pulled to host memory."""
+    tok: int
+    pos: int
+    ngen: int
+    budget: int
+    length: int
+    score: float
+    seed: int
+    saved: object
+
+
+class PagedScheduler(ContinuousScheduler):
+    """Continuous batching over a paged KV cache (DESIGN.md §13).
+
+    Same host driver as `ContinuousScheduler`, three paged behaviours on
+    top, all through the base class's hook methods:
+
+      * ADMISSION BY FREE PAGES (`_can_admit`): a request is admitted only
+        when its prompt's pages (minus prefix-cache hits) fit in the free
+        list with `reserve_pages` headroom; reservation happens inside the
+        gate so a True answer cannot fail later. Backpressure keeps FIFO
+        order — the queue head blocks admission until pages free up.
+      * PREFIX SHARING: full prompt pages (and whole identical prompts)
+        are published to a `PrefixCache` after prefill; later requests
+        point their leading block-table entries at the shared pages and
+        skip re-writing them. First divergent write => COW.
+      * COPY-ON-WRITE + PREEMPTION (`_ensure_writable`): before each
+        decode tick every live slot's write-block must be private and
+        real. A shared write-page is copied (batched `copy_pages`, padded
+        to a power-of-two pair count); page exhaustion evicts cache
+        entries, then preempts the youngest-admitted live slot — swap-OUT
+        to host memory, not recompute, so re-admitted requests keep
+        bitwise-identical outputs.
+
+    Host syncs: one `device_get` per tick on the steady path (inherited
+    from the base scheduler); preemption swap-out adds one exceptional
+    gather sync, which the analysis-lint scenario deliberately avoids.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, gen: GenerateConfig, *,
+                 paged: PagedKVConfig = PagedKVConfig(),
+                 n_slots: int = 8, ctx=None,
+                 prefill_buckets: Sequence[int] = (8, 16, 32, 64),
+                 admit_width: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 rng: Optional[jax.Array] = None):
+        super().__init__(params, cfg, gen, n_slots=n_slots, ctx=ctx,
+                         prefill_buckets=prefill_buckets,
+                         admit_width=admit_width, max_seq=max_seq, rng=rng)
+        _, seq_axes = _cache_page_axes(cfg)
+        if not any(a >= 0 for a in jax.tree.leaves(seq_axes)):
+            raise ValueError(
+                f"{cfg.arch_id}: no cache leaf tracks max_seq (pure "
+                "SSM/ring cache) — nothing to page; use "
+                "ContinuousScheduler")
+        self.paged = paged
+        ps = paged.page_size
+        self._n_meta = (cfg.hybrid.n_meta_tokens
+                        if cfg.hybrid is not None else 0)
+        seq_len = self.max_seq + self._n_meta
+        n_blocks = ceil_div(seq_len, ps)
+        n_pages = paged.n_pages or paged.n_slots_equiv * n_blocks
+        if n_pages < n_blocks + paged.reserve_pages:
+            raise ValueError(
+                f"n_pages={n_pages} cannot hold one full-length request "
+                f"({n_blocks} blocks of {ps}) plus reserve_pages="
+                f"{paged.reserve_pages}; the scheduler could deadlock")
+        self.layout = PagedLayout(page_size=ps, n_pages=n_pages,
+                                  seq_len=seq_len)
+        self._pages = PageAllocator(n_pages)
+        self._prefix = (PrefixCache(self._pages)
+                        if paged.prefix_caching else None)
+        # rid -> (reserved page list, #prefix-shared prefix) while the
+        # request sits between its _can_admit reservation and its prefill
+        self._plans: Dict[int, Tuple[List[int], int]] = {}
+        self._swapped: Dict[int, _SwapState] = {}
+        self._cow_src: List[int] = []
+        self._cow_dst: List[int] = []
+        self._tables = np.full((n_slots + 1, n_blocks),
+                               self.layout.scratch, np.int32)
+        self.stats.update(prefix_lookups=0, prefix_hits=0, cow_copies=0,
+                          preemptions=0, swap_ins=0, peak_pages_in_use=0)
+        self._prefill = _paged_prefill_fn(cfg, gen, ctx, self.max_seq,
+                                          self.layout)
+        self._decode_fn = _paged_decode_fn(cfg, gen, ctx)
+        self._copy = _copy_pages_fn(cfg)
+        self._gather = _gather_slot_fn(cfg)
+        self._restore = _restore_slot_fn(cfg)
+
+    # -- page accounting ----------------------------------------------------
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes one physical page pins across the pageable leaves."""
+        if self.pool is None:
+            return 0
+        return paged_kv_bytes(self.pool, self.cfg) \
+            // (self.layout.n_pages + 1)
+
+    # note: no submit() page-budget override is needed — the base class's
+    # ``prompt + budget <= max_seq`` check plus the __init__ deadlock
+    # check (``n_pages >= n_blocks + reserve_pages``) together bound any
+    # accepted request's worst-case page need by the arena size
+
+    def _page_or_none(self) -> Optional[int]:
+        """try_alloc with prefix-cache eviction pressure."""
+        p = self._pages.try_alloc()
+        while p is None and self._prefix is not None \
+                and self._prefix.evict_one():
+            p = self._pages.try_alloc()
+        return p
+
+    def _free_capacity(self) -> int:
+        ev = (self._prefix.evictable_pages()
+              if self._prefix is not None else 0)
+        return self._pages.n_free + ev
+
+    def _note_pages(self):
+        self.stats["peak_pages_in_use"] = max(
+            self.stats["peak_pages_in_use"], self._pages.in_use())
+
+    def _page_key(self, tokens: np.ndarray, f: int):
+        """Key of the first ``f`` full pages: page f-1 ends at logical
+        position f*ps - 1, which depends on tokens up to index
+        f*ps - n_meta - 1 (meta tokens occupy the first logical slots)."""
+        cut = max(0, f * self.layout.page_size - self._n_meta)
+        return ("PG", f, tokens[:cut].tobytes())
+
+    def _full_key(self, tokens: np.ndarray):
+        return ("FULL", len(tokens), tokens.tobytes())
+
+    def _slot_pages(self, s: int) -> List[int]:
+        scratch = self.layout.scratch
+        return [int(p) for p in self._tables[s] if p != scratch]
+
+    def _release_slot_pages(self, s: int):
+        for p in self._slot_pages(s):
+            self._pages.decref(p)
+        self._tables[s] = self.layout.scratch
+
+    # -- admission ----------------------------------------------------------
+
+    def _can_admit(self, req: Request) -> bool:
+        if req.rid in self._plans:      # re-asked within the same tick
+            return True
+        tokens = np.asarray(req.tokens, np.int32)
+        need = self.layout.pages_for(len(tokens) + self._n_meta)
+        shared: List[int] = []
+        if self._prefix is not None:
+            self.stats["prefix_lookups"] += 1
+            self._prefix.lookups += 1
+            hit = self._prefix.get(self._full_key(tokens))
+            if hit is None:
+                f_max = (len(tokens) + self._n_meta) \
+                    // self.layout.page_size
+                for f in range(f_max, 0, -1):
+                    hit = self._prefix.get(self._page_key(tokens, f))
+                    if hit is not None:
+                        break
+            if hit is not None:
+                shared = list(hit)
+                self.stats["prefix_hits"] += 1
+                self._prefix.hits += 1
+        n_fresh = need - len(shared)
+        if self._free_capacity() < n_fresh + self.paged.reserve_pages:
+            return False                # backpressure
+        for p in shared:
+            self._pages.incref(p)
+        fresh = [self._page_or_none() for _ in range(n_fresh)]
+        assert all(p is not None for p in fresh)  # capacity checked above
+        self._plans[req.rid] = (shared + fresh, len(shared))
+        return True
+
+    def _alloc_pool(self, batch):
+        return paged_pool_like(self.params, batch, self.cfg, self.ctx,
+                               max_seq=self.max_seq,
+                               n_slots=self.n_slots + 1,
+                               layout=self.layout)
+
+    def _prefill_group(self, group: List[Request], bucket: int, now: float):
+        W, lengths, slots, seeds, batch = self._stage_group(group, bucket)
+        nb, scratch = self.layout.n_blocks, self.layout.scratch
+        wt = np.full((W, nb), scratch, np.int32)
+        for i, req in enumerate(group):
+            pages, h = self._plans.pop(req.rid)
+            s = int(slots[i])
+            self._tables[s] = scratch
+            self._tables[s, :len(pages)] = pages
+            wt[i, h:len(pages)] = pages[h:]     # shared blocks stay scratch
+        pool, tok0, lp0 = self._prefill(
+            self.params, batch, jnp.asarray(lengths), jnp.asarray(wt),
+            jnp.asarray(slots), self.pool, self.rng, jnp.asarray(seeds))
+        self.pool = pool
+        tok0, lp0 = jax.device_get((tok0, lp0))   # the tick's one sync
+        if self._prefix is not None:
+            for i, req in enumerate(group):
+                tokens = np.asarray(req.tokens, np.int32)
+                need = self.layout.pages_for(len(tokens) + self._n_meta)
+                pages = [int(p) for p in self._tables[int(slots[i])][:need]]
+                f_max = (len(tokens) + self._n_meta) \
+                    // self.layout.page_size
+                for f in range(1, f_max + 1):
+                    self._prefix.put(self._page_key(tokens, f), pages[:f])
+                self._prefix.put(self._full_key(tokens), pages)
+        self._finish_admission(group, bucket, W, lengths, slots, seeds,
+                               tok0, lp0, now)
+        self._note_pages()
+
+    def _try_swap_in(self, req: Request) -> bool:
+        st = self._swapped[req.rid]
+        need = self.layout.pages_for(st.pos + self._n_meta)
+        if self._free_capacity() < need + self.paged.reserve_pages:
+            return False
+        pages = [self._page_or_none() for _ in range(need)]
+        assert all(p is not None for p in pages)
+        s = self._free.popleft()
+        self._tables[s] = self.layout.scratch
+        self._tables[s, :need] = pages
+        self.pool = self._restore(self.pool, st.saved,
+                                  jnp.asarray(self._tables[s]),
+                                  jnp.asarray(s))
+        self._queue.popleft()
+        del self._swapped[req.rid]
+        self._slot_rid[s] = req.rid
+        self._slot_uses[s] += 1
+        self._tok[s] = st.tok
+        self._pos[s] = st.pos
+        self._ngen[s] = st.ngen
+        self._active[s] = True
+        self._done[s] = False
+        self._budget[s] = st.budget
+        self._length[s] = st.length
+        self._score[s] = st.score
+        self._seed[s] = st.seed
+        self.stats["swap_ins"] += 1
+        self._note_pages()
+        return True
+
+    def _admit(self, now: float):
+        # preempted requests sit at the queue front (swap state, no plan);
+        # drain them before normal bucketed admission
+        while (self._free and self._queue
+               and self._queue[0].rid in self._swapped):
+            if not self._try_swap_in(self._queue[0]):
+                return                  # backpressure: keep FIFO order
+        super()._admit(now)
+
+    # -- decode: COW + page growth + preemption -----------------------------
+
+    def _victim(self) -> Optional[int]:
+        """Youngest-admitted live slot (LIFO preemption: the youngest
+        request has done the least work and re-enters the queue FIRST of
+        the preempted, preserving FIFO completion order overall)."""
+        live = [s for s in range(self.n_slots)
+                if self._slot_rid[s] is not None
+                and self._active[s] and not self._done[s]]
+        if not live:
+            return None
+        return max(live, key=lambda s: (
+            self._meta[self._slot_rid[s]]["admitted_at"], s))
+
+    def _preempt(self, s: int):
+        rid = self._slot_rid[s]
+        # the victim's own write-block may have been COW'd earlier in this
+        # _ensure_writable pass — its table already points at the copy
+        # destination, so the pending copy must execute before the gather
+        # reads it
+        self._flush_cow()
+        # exceptional second host sync of the tick: swap-out must land in
+        # host memory before its pages are recycled by the next alloc
+        saved = jax.device_get(self._gather(
+            self.pool, jnp.asarray(self._tables[s]), jnp.asarray(s)))
+        self._swapped[rid] = _SwapState(
+            tok=int(self._tok[s]), pos=int(self._pos[s]),
+            ngen=int(self._ngen[s]), budget=int(self._budget[s]),
+            length=int(self._length[s]), score=float(self._score[s]),
+            seed=int(self._seed[s]), saved=saved)
+        self._queue.appendleft(self._reqs[rid])
+        self._release_slot_pages(s)
+        self._slot_rid[s] = None
+        self._active[s] = False
+        self._done[s] = False
+        self._free.append(s)
+        self.stats["preemptions"] += 1
+
+    def _grow_page(self, s: int) -> Optional[int]:
+        """A page for slot ``s``'s next write — evicting prefix-cache
+        entries, then preempting victims until one frees up. None means
+        ``s`` itself was preempted (it was the last live slot)."""
+        while True:
+            p = self._page_or_none()
+            if p is not None:
+                return p
+            v = self._victim()
+            if v is None:
+                raise PagePoolExhausted(
+                    "no free pages and no live slot to preempt")
+            self._preempt(v)
+            if v == s:
+                return None
+
+    def _flush_cow(self):
+        """Execute queued COW page copies, padded with scratch->scratch
+        no-op pairs to a power-of-two width (bounded executable count).
+        Gather-before-scatter semantics of `.at[dst].set(leaf[src])` make
+        one batched call safe even when a freed source page was already
+        handed back out as another pair's destination."""
+        src, dst = self._cow_src, self._cow_dst
+        if not src:
+            return
+        self._cow_src, self._cow_dst = [], []
+        scratch = self.layout.scratch
+        w = 1
+        while w < len(src):
+            w *= 2
+        src = src + [scratch] * (w - len(src))
+        dst = dst + [scratch] * (w - len(dst))
+        self.pool = self._copy(self.pool,
+                               jnp.asarray(np.asarray(src, np.int32)),
+                               jnp.asarray(np.asarray(dst, np.int32)))
+
+    def _ensure_writable(self, alive):
+        """Pre-decode pass: every live slot's write-block must point at a
+        private real page before the step writes K/V there."""
+        ps, scratch = self.layout.page_size, self.layout.scratch
+        self._cow_src, self._cow_dst = [], []
+        for s in range(self.n_slots):
+            if not alive[s] or self._slot_rid[s] is None:
+                continue                # rid None: preempted this pass
+            wb = (int(self._pos[s]) + self._n_meta) // ps
+            page = int(self._tables[s, wb])
+            if page == scratch:
+                p = self._grow_page(s)
+                if p is None:
+                    continue
+                self._tables[s, wb] = p
+            elif self._pages.ref(page) > 1:
+                p = self._grow_page(s)
+                if p is None:
+                    continue
+                # the preemption inside _grow_page may itself have COW'd +
+                # flushed; re-read the current page (still shared: only
+                # OTHER slots' pages were released)
+                self._cow_src.append(int(self._tables[s, wb]))
+                self._cow_dst.append(p)
+                self._pages.decref(int(self._tables[s, wb]))
+                self._tables[s, wb] = p
+                self.stats["cow_copies"] += 1
+        self._flush_cow()
+        self._note_pages()
+
+    def _decode_call(self, alive):
+        self._ensure_writable(alive)
+        alive = self._active & ~self._done      # preemption may shrink it
+        pool, nxt, lp = self._decode_fn(
+            self.params, self.pool, jnp.asarray(self._tables),
+            jnp.asarray(self._tok), jnp.asarray(self._pos),
+            jnp.asarray(alive), self.rng, jnp.asarray(self._seed),
+            jnp.asarray(self._ngen))
+        self.pool = pool
+        return nxt, lp
+
+    def _retire(self, now: float) -> List[RequestResult]:
+        retiring = [s for s in range(self.n_slots)
+                    if self._slot_rid[s] is not None and self._done[s]]
+        out = super()._retire(now)
+        for s in retiring:
+            self._release_slot_pages(s)
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,295 @@
+"""Paged KV cache tests (repro.serve.paged + PagedScheduler, DESIGN.md §13).
+
+Three regression anchors:
+
+  * ALLOCATOR SAFETY — randomized alloc/incref/decref schedules never
+    double-free, never leak (free + referenced == n_pages at every step),
+    and misuse (decref of a free page, incref of a free page) raises.
+  * BITWISE PARITY — the paged scheduler emits token-for-token what the
+    slot-pool scheduler and a per-request one-shot ``generate`` emit,
+    across cache families (GQA, MLA latent, hybrid ring+meta), with
+    prefix sharing ON and OFF, and across preemption/re-admission under
+    page exhaustion. MoE configs get non-binding eval capacity
+    (DESIGN.md §9).
+  * KERNEL EQUIVALENCE (kernels lane) — ``flash_decode_paged`` over a
+    permuted page arena matches ``flash_decode`` over the contiguous
+    rows the block tables address.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PagedKVConfig, get_config, reduced
+from repro.models import init_model
+from repro.serve import (ContinuousScheduler, GenerateConfig, PageAllocator,
+                         PagedScheduler, PrefixCache, Request, generate)
+from repro.serve.paged import PagedLayout, ceil_div
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch, **over):
+    kw = dict(d_model=64, n_layers=2, d_ff=128, vocab=97)
+    kw.update(over)
+    cfg = reduced(get_config(arch), **kw)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, eval_capacity_factor=float(cfg.moe.n_experts)))
+    return cfg
+
+
+def _requests(cfg, n, *, seed=1, lens=(4, 7, 11, 14), budgets=(3, 6, 9),
+              prefix=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        toks = rng.integers(3, cfg.vocab - 1,
+                            size=lens[i % len(lens)]).astype(np.int32)
+        if prefix is not None and i % 2 == 0:
+            toks = np.concatenate([prefix, toks]).astype(np.int32)
+        reqs.append(Request(rid=i, tokens=toks, arrival=0.0,
+                            max_new=budgets[i % len(budgets)]))
+    return reqs
+
+
+def _serve(cls, params, cfg, gen, reqs, **kw):
+    sched = cls(params, cfg, gen, prefill_buckets=(8, 16), max_seq=40, **kw)
+    out = sched.run([dataclasses.replace(r) for r in reqs])
+    return {r.rid: r.tokens for r in out}, sched
+
+
+def _oneshot(params, cfg, gen, req):
+    g = dataclasses.replace(gen, max_new=req.max_new, max_seq=40)
+    res = generate(params, {"tokens": jnp.asarray(req.tokens[None])}, cfg, g)
+    n = min(int(np.asarray(res.lengths)[0]), req.max_new)
+    return np.asarray(res.tokens)[0, :n]
+
+
+# ---------------------------------------------------------------------------
+# allocator + prefix cache (host logic, no device work)
+# ---------------------------------------------------------------------------
+
+def test_allocator_fuzz_no_leak_no_double_free():
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(17)
+    held = []                                 # (page, extra_refs)
+    for _ in range(2000):
+        op = rng.integers(0, 3)
+        if op == 0:                           # alloc
+            p = alloc.try_alloc()
+            if p is None:
+                assert alloc.n_free == 0
+            else:
+                held.append([p, 0])
+        elif op == 1 and held:                # incref a held page
+            ent = held[rng.integers(len(held))]
+            alloc.incref(ent[0])
+            ent[1] += 1
+        elif op == 2 and held:                # decref a held page
+            i = rng.integers(len(held))
+            p, extra = held[i]
+            alloc.decref(p)
+            if extra:
+                held[i][1] -= 1
+            else:
+                held.pop(i)
+        alloc.check()                         # free xor referenced, always
+    for p, extra in held:
+        for _ in range(extra + 1):
+            alloc.decref(p)
+    alloc.check()
+    assert alloc.n_free == 17, "leak after randomized schedule"
+
+
+def test_allocator_misuse_raises():
+    alloc = PageAllocator(2)
+    p = alloc.alloc()
+    alloc.decref(p)
+    with pytest.raises(RuntimeError):
+        alloc.decref(p)                       # double free
+    with pytest.raises(RuntimeError):
+        alloc.incref(p)                       # incref on free page
+
+
+def test_prefix_cache_refcounts_and_eviction():
+    alloc = PageAllocator(4)
+    cache = PrefixCache(alloc)
+    a, b = alloc.alloc(), alloc.alloc()
+    cache.put(("PG", 1, b"x"), [a])
+    cache.put(("PG", 2, b"xy"), [a, b])
+    assert alloc.ref(a) == 3 and alloc.ref(b) == 2
+    cache.put(("PG", 1, b"x"), [a])           # duplicate put: no-op
+    assert alloc.ref(a) == 3
+    assert cache.get(("PG", 1, b"x")) == [a]
+    alloc.decref(a)
+    alloc.decref(b)                           # slots release their refs
+    assert cache.evictable_pages() == 2
+    assert cache.evict_one() and cache.evict_one()
+    assert not cache.evict_one()
+    alloc.check()
+    assert alloc.n_free == 4
+
+
+def test_layout_geometry():
+    lay = PagedLayout(page_size=8, n_pages=20, seq_len=44)
+    assert lay.n_blocks == ceil_div(44, 8) == 6
+    assert lay.scratch == 20
+    assert lay.pages_for(0) == 0
+    assert lay.pages_for(8) == 1
+    assert lay.pages_for(9) == 2
+
+
+# ---------------------------------------------------------------------------
+# validation errors
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_overflowing_budget():
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=16, max_seq=16, eos_id=-1)
+    with pytest.raises(ValueError, match="pinned cache length"):
+        generate(params, {"tokens": jnp.zeros((1, 8), jnp.int32)}, cfg, gen)
+
+
+def test_paged_scheduler_rejects_undersized_arena():
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=8, eos_id=-1)
+    with pytest.raises(ValueError, match="deadlock"):
+        PagedScheduler(params, cfg, gen, max_seq=40,
+                       paged=PagedKVConfig(page_size=8, n_pages=4))
+
+
+def test_paged_scheduler_rejects_unpageable_arch():
+    cfg = _cfg("mamba2-1.3b")                 # pure-SSM cache: no KV leaf
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=8, eos_id=-1)
+    with pytest.raises(ValueError, match="nothing to page"):
+        PagedScheduler(params, cfg, gen, max_seq=40)
+
+
+# ---------------------------------------------------------------------------
+# bitwise serving parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v3-671b", "hymba-1.5b"])
+def test_paged_parity_vs_slot_and_oneshot(arch):
+    over = ({"n_heads": 4, "n_kv_heads": 2, "head_dim": 16}
+            if arch == "yi-6b" else {})
+    cfg = _cfg(arch, **over)
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=10, eos_id=-1)
+    reqs = _requests(cfg, 6)
+    slot, _ = _serve(ContinuousScheduler, params, cfg, gen, reqs, n_slots=3)
+    paged, ps = _serve(PagedScheduler, params, cfg, gen, reqs, n_slots=3,
+                       paged=PagedKVConfig(page_size=8, n_slots_equiv=4))
+    for r in reqs:
+        ref = _oneshot(params, cfg, gen, r)
+        assert np.array_equal(slot[r.rid], ref), (arch, "slot", r.rid)
+        assert np.array_equal(paged[r.rid], ref), (arch, "paged", r.rid)
+    ps._pages.check()
+
+
+def test_prefix_sharing_is_bitwise_invisible():
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=8, eos_id=-1)
+    prefix = np.arange(8, dtype=np.int32) + 3  # exactly one full page
+    reqs = _requests(cfg, 8, prefix=prefix, lens=(4, 7, 8, 5),
+                     budgets=(3, 6, 8))
+    kw = dict(n_slots=3)
+    shared, ss = _serve(PagedScheduler, params, cfg, gen, reqs,
+                        paged=PagedKVConfig(page_size=8, n_slots_equiv=4),
+                        **kw)
+    unshared, _ = _serve(PagedScheduler, params, cfg, gen, reqs,
+                         paged=PagedKVConfig(page_size=8, n_slots_equiv=4,
+                                             prefix_caching=False), **kw)
+    assert ss.stats["prefix_hits"] > 0, "trace must exercise sharing"
+    for r in reqs:
+        assert np.array_equal(shared[r.rid], unshared[r.rid]), r.rid
+        assert np.array_equal(shared[r.rid], _oneshot(params, cfg, gen, r))
+    # releasing the cache's own refs must drain the arena completely
+    ss._pages.check()
+    while ss._prefix.evict_one():
+        pass
+    assert ss._pages.n_free == ss.layout.n_pages
+
+
+def test_preemption_readmission_parity_under_exhaustion():
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=20, eos_id=-1)
+    reqs = _requests(cfg, 6, budgets=(20,), lens=(4, 9, 13))
+    slot, _ = _serve(ContinuousScheduler, params, cfg, gen, reqs, n_slots=3)
+    # n_blocks = ceil(40/4) = 10; 13 pages cannot hold 3 slots x 20 new
+    # tokens -> exhaustion mid-decode forces preempt + swap-in
+    paged, ps = _serve(PagedScheduler, params, cfg, gen, reqs, n_slots=3,
+                       paged=PagedKVConfig(page_size=4, n_pages=13))
+    assert ps.stats["preemptions"] > 0, "arena must actually exhaust"
+    assert ps.stats["swap_ins"] == ps.stats["preemptions"]
+    for r in reqs:
+        assert np.array_equal(slot[r.rid], paged[r.rid]), r.rid
+    ps._pages.check()
+    while ps._prefix.evict_one():
+        pass
+    assert ps._pages.n_free == ps.layout.n_pages, "leak after preemptions"
+
+
+def test_paged_submit_rejects_cache_overflow():
+    cfg = _cfg("yi-6b")
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=32, eos_id=-1)
+    sched = PagedScheduler(params, cfg, gen, max_seq=40,
+                           paged=PagedKVConfig(page_size=8))
+    # 16 + 32 > max_seq=40: rejected up front, never silently wrapped
+    with pytest.raises(ValueError, match="pinned pool cache length"):
+        sched.submit(Request(rid=0, tokens=np.arange(16, dtype=np.int32),
+                             arrival=0.0))
+
+
+# ---------------------------------------------------------------------------
+# paged flash kernel (kernels lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.kernels
+def test_flash_decode_paged_matches_contiguous():
+    from repro.kernels import flash_decode, flash_decode_paged
+    B, H, KV, hd, ps, nb = 4, 4, 2, 16, 8, 5
+    n_pages = B * nb + 3
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    kc = jax.random.normal(k1, (B, nb * ps, KV, hd))
+    vc = jax.random.normal(k2, (B, nb * ps, KV, hd))
+    q = jax.random.normal(k3, (B, H, hd))
+    # scatter the contiguous rows into a permuted page arena
+    perm = np.random.default_rng(0).permutation(n_pages)[:B * nb]
+    tables = perm.reshape(B, nb).astype(np.int32)
+    ka = jnp.zeros((n_pages + 1, ps, KV, hd))
+    va = jnp.zeros((n_pages + 1, ps, KV, hd))
+    ka = ka.at[tables.reshape(-1)].set(
+        kc.reshape(B * nb, ps, KV, hd))
+    va = va.at[tables.reshape(-1)].set(
+        vc.reshape(B * nb, ps, KV, hd))
+    index = jnp.asarray([3, 17, 26, nb * ps - 1], jnp.int32)
+    # bs=ps: identical block partition -> identical online-softmax
+    # accumulation order -> the comparison is BITWISE, not approximate
+    ref = flash_decode(q, kc, vc, index, bs=ps, interpret=True)
+    out = flash_decode_paged(q, ka, va, jnp.asarray(tables), index,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.kernels
+def test_paged_scheduler_flash_decode_parity():
+    cfg = _cfg("yi-6b", n_heads=4, n_kv_heads=2, head_dim=16)
+    params = init_model(KEY, cfg)
+    gen = GenerateConfig(max_new=8, eos_id=-1, flash_decode=True)
+    reqs = _requests(cfg, 5, budgets=(3, 6, 8))
+    paged, _ = _serve(PagedScheduler, params, cfg, gen, reqs, n_slots=2,
+                      paged=PagedKVConfig(page_size=8, n_slots_equiv=3))
+    gref = dataclasses.replace(gen, flash_decode=False)
+    for r in reqs:
+        assert np.array_equal(paged[r.rid],
+                              _oneshot(params, cfg, gref, r)), r.rid
