@@ -70,6 +70,11 @@ def bench_table10(fast):
     return main(fast)
 
 
+def bench_table11(fast):
+    from benchmarks.table11_overlap import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -114,6 +119,7 @@ BENCHES = {
     "table8": bench_table8,
     "table9": bench_table9,
     "table10": bench_table10,
+    "table11": bench_table11,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

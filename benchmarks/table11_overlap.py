@@ -1,0 +1,231 @@
+"""Beyond paper — Table 11: overlapped (micro-chunked) expert dispatch.
+
+Sweeps the §14 overlapped substrates x chunk count two ways:
+
+  * REAL 8-device mesh (simulated CPU devices, `moe_sharded`): per cell
+    the routed forward is compiled and run, and the §10/§14 three-way
+    invariant is ASSERTED — in-graph telemetry == analytic cost model ==
+    all-to-all ops parsed from the compiled HLO (calls/bytes exact, wire
+    < 1 B), with exposed + hidden == wire. Output parity is pinned
+    BITWISE: every non-compressed overlapped cell equals dense, every
+    compressed one equals the unchunked compressed reference, at every
+    chunk count. The host_cond dropped chunk executable stays
+    zero-collective under the maximal overlapped composition.
+
+  * MODELED production cell (pure math — simulated-CPU wall time cannot
+    show communication overlap, the collectives are memcpys): expert-FFN
+    compute priced from analytic FLOPs at the TPU v5e peak
+    (`benchmarks/common.py::TPU_V5E`), wire priced by the two-tier
+    `Topology` bandwidths, and the n-chunk schedule priced by the FIFO
+    two-resource `pipeline_time` model. At the paper-ish shape (d_model
+    1024, d_ff 4096, f32 wire) the wire/compute time ratio is ~1.1, so
+    the double-buffered pipeline hides most of the exchange.
+
+Acceptance bars (asserted):
+  * overlapped >= 1.25x dense routed-step throughput (modeled) at the
+    best chunk count, at BITWISE-identical outputs (real mesh);
+  * exposed wire <= 50%% of total wire at that chunk count;
+  * telemetry == parsed HLO == cost model for every real cell;
+  * total bytes/wire EXACTLY equal dense at every chunk count (chunking
+    multiplies calls, never bytes);
+  * dropped chunk executable: zero all-to-alls.
+
+Writes benchmarks/artifacts/table11_overlap.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ART, TPU_V5E, csv_row, run_subprocess
+
+SUBSTRATES = ("dense", "compressed", "overlapped", "overlapped_hierarchical",
+              "overlapped_compressed", "overlapped_hierarchical_compressed")
+N_CHUNKS = (1, 2, 4)
+
+_WORKER = r"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import (CommConfig, GatingDropoutConfig, ModelConfig,
+                                MoEConfig, TrainConfig)
+from repro.core import init_moe_params, moe_sharded, ParallelContext
+from repro.comm import layer_cost
+from repro.data import LMTaskConfig, SyntheticLM, stack_batches
+from repro.analysis import parse_collectives
+from repro.launch.mesh import make_mesh
+from repro.models import init_model
+from repro.training import init_train_state, make_chunk_step
+
+SUBSTRATES = %(substrates)s
+N_CHUNKS = %(n_chunks)s
+
+mesh = make_mesh((8,), ('data',))
+ctx = ParallelContext(mesh=mesh)
+
+def build(substrate, n_chunks):
+    return ModelConfig(
+        d_model=64, d_ff=128, vocab=256, n_layers=1, n_heads=2, n_kv_heads=2,
+        remat=False, dtype='float32', param_dtype='float32',
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=128,
+                      backend='sharded',
+                      comm=CommConfig(substrate=substrate, n_chunks=n_chunks),
+                      gating_dropout=GatingDropoutConfig(
+                          mode='gate_drop', rate=0.3, strategy='host_cond')))
+
+cfg0 = build('dense', 1)
+p = init_moe_params(jax.random.PRNGKey(0), cfg0)
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 64))
+out, ys = {}, {}
+for sub in SUBSTRATES:
+    for n in N_CHUNKS:
+        cfg = build(sub, n)
+        f = jax.jit(lambda p_, x_: moe_sharded(p_, x_, cfg, ctx, rng=None,
+                                               decision=False))
+        colls = parse_collectives(f.lower(p, x).compile().as_text()
+                                  ).get('all-to-all', {'count': 0, 'bytes': 0,
+                                                       'wire_bytes': 0})
+        y, aux = f(p, x)
+        ys[(sub, n)] = np.asarray(y)
+        tele = {k: float(aux[k]) for k in
+                ('comm_a2a_calls', 'comm_bytes', 'comm_wire_bytes',
+                 'comm_exposed_bytes', 'comm_hidden_bytes')}
+        c = layer_cost(cfg, tokens_per_shard=16, ep=8)
+        # telemetry == parsed HLO == cost model, per cell (the §14 bar)
+        assert tele['comm_a2a_calls'] == colls['count'] == c['calls'], \
+            (sub, n, tele, colls, c)
+        assert tele['comm_bytes'] == colls['bytes'] == c['bytes'], \
+            (sub, n, tele, colls, c)
+        assert abs(tele['comm_wire_bytes'] - colls['wire_bytes']) < 1 \
+            and abs(tele['comm_wire_bytes'] - c['wire_bytes']) < 1, \
+            (sub, n, tele, colls, c)
+        assert (tele['comm_exposed_bytes'] + tele['comm_hidden_bytes']
+                == tele['comm_wire_bytes']), (sub, n, tele)
+        # chunking multiplies CALLS only: bytes/wire == the n=1 exchange
+        base = out.get(f'{sub}@1')
+        if base is not None:
+            assert tele['comm_bytes'] == base['telemetry']['comm_bytes'], \
+                (sub, n)
+            assert (tele['comm_wire_bytes']
+                    == base['telemetry']['comm_wire_bytes']), (sub, n)
+        # wall time of the compiled forward (context only: simulated-CPU
+        # collectives are memcpys, overlap cannot show up here)
+        f(p, x)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            r = f(p, x)[0]
+        r.block_until_ready()
+        out[f'{sub}@{n}'] = {'telemetry': tele, 'hlo': colls,
+                             'fwd_us': (time.perf_counter() - t0) / 5 * 1e6}
+
+# bitwise parity: every overlapped cell == its base substrate's output
+for (sub, n), y in ys.items():
+    ref = ys[('compressed', 1) if 'compressed' in sub else ('dense', 1)]
+    assert np.array_equal(y, ref), (sub, n, 'not bitwise base substrate')
+
+# dropped chunk executable: zero collectives under the maximal composition
+cfg = build('overlapped_hierarchical_compressed', 4)
+tc = TrainConfig(lr=1e-3, warmup_steps=4, seed=0)
+task = SyntheticLM(LMTaskConfig(vocab=256, seq_len=16))
+batches = {k: jnp.asarray(v) for k, v in
+           stack_batches(lambda i: task.sample_batch(i, 8), 0, 3).items()}
+state = init_train_state(init_model(jax.random.PRNGKey(0), cfg), tc)
+chunk = make_chunk_step(cfg, tc, ctx, jit=False)
+txts = {dec: jax.jit(chunk, static_argnums=(2,)).lower(
+    state, batches, dec).compile().as_text() for dec in (False, True)}
+assert txts[False].count('all-to-all') > 0
+assert txts[True].count('all-to-all') == 0, 'dropped chunk has all-to-all'
+out['dropped_a2a_ops'] = txts[True].count('all-to-all')
+out['bitwise_vs_base'] = True
+print(json.dumps(out))
+"""
+
+# modeled production cell: one routed layer, paper-ish shape, f32 wire
+_E, _CAP, _D, _DFF, _ISZ, _EP = 8, 1024, 1024, 4096, 4, 8
+
+
+def _modeled_sweep():
+    """Pure cost-model math: per (substrate, n_chunks), the serial vs
+    FIFO-pipelined step time of one routed layer at TPU v5e compute and
+    the two-tier Topology wire rates."""
+    from repro.comm import (effective_chunks, pipeline_time, transport_cost,
+                            transport_time)
+    from repro.configs.base import CommConfig, Topology
+    top = Topology()
+    # gated expert FFN: 3 grouped matmuls x 2 FLOPs over the dispatched
+    # (E*cap, d) rows -> per-device compute the pipeline can hide behind
+    compute_s = 6.0 * _E * _CAP * _D * _DFF / TPU_V5E.flops
+    rows = {}
+    for sub in SUBSTRATES:
+        for n in (1, 2, 4, 8, 16):
+            comm = CommConfig(substrate=sub, n_chunks=n)
+            if not comm.overlapped and n > 1:
+                continue
+            c = transport_cost(comm, ep=_EP, n_experts=_E, cap=_CAP,
+                               d_model=_D, itemsize=_ISZ)
+            t = transport_time(c, top)
+            n_eff = effective_chunks(_CAP, n) if comm.overlapped else 1
+            step_s = pipeline_time(compute_s, t["comm_s"], n_eff)
+            rows[f"{sub}@{n}"] = {
+                "n_eff": n_eff, "comm_s": t["comm_s"],
+                "exposed_s": t["exposed_s"],
+                "exposed_frac": (c["exposed_wire_bytes"] / c["wire_bytes"]
+                                 if c["wire_bytes"] else 1.0),
+                "wire_bytes": c["wire_bytes"], "step_s": step_s,
+                "steps_s": 1.0 / step_s}
+    return compute_s, rows
+
+
+def main(fast: bool = True):
+    res = json.loads(run_subprocess(_WORKER % {
+        "substrates": repr(SUBSTRATES), "n_chunks": repr(N_CHUNKS)}
+        ).strip().splitlines()[-1])
+
+    compute_s, modeled = _modeled_sweep()
+    dense = modeled["dense@1"]
+    best_name, best = None, None
+    for name, r in modeled.items():
+        if name.startswith("overlapped@"):
+            if best is None or r["steps_s"] > best["steps_s"]:
+                best_name, best = name, r
+        r["speedup_vs_dense"] = r["steps_s"] * dense["step_s"]
+
+    # acceptance: the pipeline buys >= 1.25x the dense routed step at
+    # bitwise-identical outputs, exposing <= half the wire
+    assert res["bitwise_vs_base"] is True
+    assert best["speedup_vs_dense"] >= 1.25, (best_name, best)
+    assert best["exposed_frac"] <= 0.5, (best_name, best)
+    assert best["wire_bytes"] == dense["wire_bytes"], (best_name, best)
+
+    for name, r in sorted(modeled.items()):
+        csv_row(f"table11/{name}", r["step_s"] * 1e6,
+                f"steps_s={r['steps_s']:.1f};"
+                f"speedup={r['speedup_vs_dense']:.2f}x;"
+                f"exposed_frac={r['exposed_frac']:.2f};"
+                f"n_eff={r['n_eff']}")
+    csv_row("table11/best", best["step_s"] * 1e6,
+            f"{best_name};speedup={best['speedup_vs_dense']:.2f}x;"
+            f"exposed_frac={best['exposed_frac']:.2f}")
+
+    out = {
+        "real_mesh": res,
+        "modeled": modeled,
+        "best": {"cell": best_name, **best},
+        "config": {
+            "mesh": "8x data (simulated CPU)", "real_tokens_per_shard": 16,
+            "modeled_shape": {"n_experts": _E, "cap": _CAP, "d_model": _D,
+                              "d_ff_expert": _DFF, "itemsize": _ISZ,
+                              "ep": _EP},
+            "compute_s_per_layer": compute_s,
+            "hw": TPU_V5E.desc,
+            "note": "throughput modeled (v5e FLOPs + two-tier Topology "
+                    "wire + FIFO pipeline): simulated-CPU collectives "
+                    "are memcpys, so real-mesh cells pin bitwise parity "
+                    "and telemetry==HLO==cost instead of wall time"}}
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table11_overlap.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

@@ -120,30 +120,37 @@ def get_executable(name: str) -> ExecutableSpec:
 
 def _moe_cfg(substrate: str = "dense", *, backend: str = "sharded",
              dtype: str = "float32", top_k: int = 2, gated: bool = True,
-             d_model: int = 32, d_ff: int = 64, n_experts: int = 8):
+             d_model: int = 32, d_ff: int = 64, n_experts: int = 8,
+             n_chunks: int = 4):
     from repro.configs.base import (CommConfig, GatingDropoutConfig,
                                     ModelConfig, MoEConfig)
     return ModelConfig(
         d_model=d_model, d_ff=d_ff, vocab=64, dtype=dtype,
         gated_mlp=gated,
         moe=MoEConfig(n_experts=n_experts, top_k=top_k, d_ff_expert=d_ff,
-                      jitter_eps=0.0, comm=CommConfig(substrate=substrate),
+                      jitter_eps=0.0,
+                      comm=CommConfig(substrate=substrate,
+                                      n_chunks=n_chunks),
                       backend=backend,
                       gating_dropout=GatingDropoutConfig(
                           mode="gate_drop", rate=0.3)))
 
 
-def _train_cfg(substrate: str = "hierarchical_compressed"):
+def _train_cfg(substrate: str = "hierarchical_compressed", *,
+               n_chunks: int = 4):
     from repro.configs.base import (CommConfig, GatingDropoutConfig,
                                     ModelConfig, MoEConfig)
     # scan_layers=False: HLO counts a scanned segment body ONCE; the cost
-    # model prices per MoE layer — unrolled, the two agree exactly
+    # model prices per MoE layer — unrolled, the two agree exactly.
+    # (Overlapped substrates are already HLO-exact under scan: the chunk
+    # pipeline is an unrolled Python loop, DESIGN.md §14.)
     return ModelConfig(
         d_model=32, d_ff=64, vocab=64, n_layers=2, n_heads=2, n_kv_heads=2,
         remat=False, scan_layers=False, dtype="float32",
         param_dtype="float32",
         moe=MoEConfig(n_experts=8, top_k=1, d_ff_expert=64, jitter_eps=0.0,
-                      comm=CommConfig(substrate=substrate),
+                      comm=CommConfig(substrate=substrate,
+                                      n_chunks=n_chunks),
                       backend="sharded",
                       gating_dropout=GatingDropoutConfig(
                           mode="gate_drop", rate=0.3,
@@ -199,7 +206,8 @@ def _build_moe_layer(substrate: str, decision: bool):
     return build
 
 
-def _build_train_chunk(decision: bool):
+def _build_train_chunk(decision: bool,
+                       substrate: str = "hierarchical_compressed"):
     def build():
         import jax
         import jax.numpy as jnp
@@ -209,7 +217,7 @@ def _build_train_chunk(decision: bool):
         from repro.models import init_model
         from repro.training.loop import make_chunk_step
         from repro.training.steps import init_train_state
-        cfg = _train_cfg()
+        cfg = _train_cfg(substrate)
         tc = TrainConfig(lr=1e-3, warmup_steps=4, seed=0)
         ctx = ParallelContext(mesh=make_mesh((8,), ("data",)))
         state = init_train_state(init_model(jax.random.PRNGKey(0), cfg), tc)
@@ -490,8 +498,13 @@ def _paged_scheduler_scenario():
 _VMEM = {"budget_bytes": 16 << 20}
 _DTYPE = {"min_elems": 4096}
 
-for _sub in ("dense", "hierarchical", "compressed",
-             "hierarchical_compressed"):
+# all eight substrates (DESIGN.md §10, §14): the overlapped rows assert
+# the §14 invariant in the lint gate — a2a call count = n_eff x the base
+# substrate's at EXACTLY equal total bytes/wire (the chunk pipeline is
+# an unrolled loop, so HLO carries each per-chunk collective distinctly)
+from repro.configs.base import COMM_SUBSTRATES as _ALL_SUBS  # noqa: E402
+
+for _sub in _ALL_SUBS:
     register_executable(ExecutableSpec(
         name=f"moe_layer/{_sub}",
         build=_build_moe_layer(_sub, decision=False),
@@ -515,6 +528,19 @@ register_executable(ExecutableSpec(
 register_executable(ExecutableSpec(
     name="train_chunk/dropped",
     build=_build_train_chunk(decision=True),
+    expect={"no-collectives": {"zero": True}},
+    n_devices=8))
+
+register_executable(ExecutableSpec(
+    name="train_chunk/overlapped",
+    build=_build_train_chunk(decision=False, substrate="overlapped"),
+    expect={"no-collectives": _step_cost_expect(
+        _train_cfg("overlapped"), tokens_per_shard=16, ep=8)},
+    n_devices=8))
+
+register_executable(ExecutableSpec(
+    name="train_chunk/overlapped_dropped",
+    build=_build_train_chunk(decision=True, substrate="overlapped"),
     expect={"no-collectives": {"zero": True}},
     n_devices=8))
 

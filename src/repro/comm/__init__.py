@@ -2,9 +2,10 @@
 (DESIGN.md §10): substrate registry + transports (`substrate.py`) and the
 HLO-validated analytic bytes model (`cost.py`)."""
 from repro.comm import cost  # noqa: F401  (must precede substrate)
-from repro.comm.cost import (ep_tier_groups, factored_ep,  # noqa: F401
-                             format_table, layer_cost, step_cost,
-                             substrate_table, transport_cost)
+from repro.comm.cost import (effective_chunks, ep_tier_groups,  # noqa: F401
+                             factored_ep, format_table, layer_cost,
+                             pipeline_time, step_cost, substrate_table,
+                             transport_cost, transport_time)
 from repro.comm.substrate import (CommConfig, CommEnv, Transport,  # noqa: F401
                                   available_substrates, comm_zero,
                                   dequantize, get_substrate, make_transport,

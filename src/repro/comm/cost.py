@@ -63,6 +63,18 @@ def ep_tier_groups(ep: int, ep_inner: int = 0):
     return intra, inter
 
 
+def effective_chunks(cap: int, n_chunks: int) -> int:
+    """Micro-chunk count the overlapped transport ACTUALLY runs: the
+    largest divisor of ``cap`` that is <= the requested ``n_chunks``
+    (clamped to [1, cap]). Shared by the transport (comm/substrate.py)
+    and this cost model so the two can never disagree about how many
+    per-chunk collectives the executable contains (DESIGN.md §14)."""
+    n = max(1, min(int(n_chunks), max(int(cap), 1)))
+    while cap % n:
+        n -= 1
+    return n
+
+
 def _a2a(elems: int, itemsize: int, g: int) -> Dict[str, float]:
     b = float(elems * itemsize)
     return {"calls": 1.0, "bytes": b, "wire_bytes": b * (g - 1) / max(g, 1)}
@@ -82,12 +94,24 @@ def transport_cost(comm: CommConfig, *, ep: int, n_experts: int, cap: int,
     uncompressed payload; ``tiers`` (gi, go) overrides the hierarchical
     factorization when the mesh fixes it (ep_on_model: tiers are the
     (model, data) axes themselves). Keys: calls, bytes, wire_bytes,
-    intra_wire_bytes, inter_wire_bytes. A flat substrate's single hop
-    spans every tier, so ALL its wire counts as inter-tier — the
-    pessimistic cross-machine bytes the paper targets; hierarchical
-    substrates split the wire between the two tiers."""
+    intra_wire_bytes, inter_wire_bytes, exposed_wire_bytes,
+    hidden_wire_bytes. A flat substrate's single hop spans every tier, so
+    ALL its wire counts as inter-tier — the pessimistic cross-machine
+    bytes the paper targets; hierarchical substrates split the wire
+    between the two tiers.
+
+    Overlapped substrates run every hop ``n_eff`` times (one per
+    capacity micro-chunk, ``effective_chunks``): ``calls`` multiplies by
+    n_eff while ``bytes``/``wire_bytes`` stay EXACTLY equal to the one
+    dense exchange (each chunk carries 1/n_eff of the rows — cap is
+    divisible by n_eff by construction). ``exposed_wire_bytes`` is the
+    structurally non-overlappable fraction: the pipeline's edge chunks
+    (first dispatch, last combine) can never hide behind compute, so
+    exposed = wire / n_eff and hidden = the rest; non-overlapped
+    substrates expose everything (hidden = 0)."""
     rows = n_experts * cap
     elems = rows * d_model
+    n_eff = effective_chunks(cap, comm.n_chunks) if comm.overlapped else 1
     total = {"calls": 0.0, "bytes": 0.0, "wire_bytes": 0.0,
              "intra_wire_bytes": 0.0, "inter_wire_bytes": 0.0}
     # tensors crossing the wire per direction: [(elems, itemsize, name)]
@@ -108,7 +132,15 @@ def transport_cost(comm: CommConfig, *, ep: int, n_experts: int, cap: int,
     for _direction in ("dispatch", "combine"):
         for g, tier in hops:
             for e, isz in wire:
-                _acc(total, _a2a(e, isz, g), tier)
+                # n_eff per-chunk ops of e/n_eff elements each: the
+                # integer division is exact (cap % n_eff == 0), so the
+                # byte totals reproduce the unchunked exchange EXACTLY
+                chunk_op = _a2a(e // n_eff, isz, g)
+                _acc(total, {k: v * n_eff for k, v in chunk_op.items()},
+                     tier)
+    total["exposed_wire_bytes"] = total["wire_bytes"] / n_eff
+    total["hidden_wire_bytes"] = (total["wire_bytes"]
+                                  - total["exposed_wire_bytes"])
     return total
 
 
@@ -153,33 +185,91 @@ def step_cost(cfg: ModelConfig, *, tokens_per_shard: int, ep: int,
     return {k: v * mult for k, v in per.items()}
 
 
+def transport_time(cost: Dict[str, float], topology) -> Dict[str, float]:
+    """Bandwidth-weighted two-tier wire time (DESIGN.md §14): intra-tier
+    wire priced at the topology's ICI-class bandwidth, inter-tier at the
+    DCN-class one. ``exposed_s``/``hidden_s`` split the total by the cost
+    dict's structural exposed fraction. Pure math — never changes
+    numerics, only estimates."""
+    intra_s = cost["intra_wire_bytes"] / topology.intra_bps
+    inter_s = cost["inter_wire_bytes"] / topology.inter_bps
+    comm_s = intra_s + inter_s
+    w = cost["wire_bytes"]
+    frac = (cost.get("exposed_wire_bytes", w) / w) if w > 0 else 1.0
+    return {"comm_s": comm_s, "exposed_s": comm_s * frac,
+            "hidden_s": comm_s * (1.0 - frac)}
+
+
+def pipeline_time(compute_s: float, comm_s: float, n_chunks: int) -> float:
+    """Step time of the n-chunk double-buffered pipeline under a
+    two-resource (network + compute) FIFO event model: dispatch(0) is
+    issued first, then per chunk i the schedule issues dispatch(i+1),
+    FFN(i) (after dispatch(i) lands), combine(i) (after FFN(i)) — the
+    program order ``Transport.pipelined`` emits. Network ops serialize in
+    issue order on one channel; compute on another. n_chunks=1 collapses
+    to the serial comm + compute sum (nothing overlaps)."""
+    n = max(1, int(n_chunks))
+    if n == 1:
+        return comm_s + compute_s
+    hop_s = comm_s / (2 * n)           # one chunk's dispatch OR combine
+    ffn_s = compute_s / n
+    net = hop_s                        # dispatch(0) in flight
+    d_done = [net] + [0.0] * (n - 1)
+    cpu = 0.0
+    for i in range(n):
+        if i + 1 < n:
+            net += hop_s
+            d_done[i + 1] = net
+        cpu = max(cpu, d_done[i]) + ffn_s          # FFN(i)
+        net = max(net, cpu) + hop_s                # combine(i)
+    return net
+
+
 def substrate_table(cfg: ModelConfig, *, tokens_per_shard: int, ep: int,
-                    is_training: bool = True,
-                    quant: str = "int8") -> Dict[str, Dict[str, float]]:
+                    is_training: bool = True, quant: str = "int8",
+                    n_chunks: int = 0,
+                    topology=None) -> Dict[str, Dict[str, float]]:
     """Predicted per-step forward bytes for EVERY registered substrate at
     a given factorization — the ``launch/dryrun.py --comm-table`` payload.
-    Pure math: nothing is lowered or compiled."""
+    Pure math: nothing is lowered or compiled (the registry import only
+    defines transport builders). Each row also carries the two-tier time
+    estimates ``t_comm_s``/``t_exposed_s`` (``transport_time`` at the
+    config's — or the given — topology); ``n_chunks`` overrides the
+    overlapped substrates' chunk count (0 keeps the config's)."""
     import dataclasses
+    from repro.comm.substrate import available_substrates
     out = {}
-    for name in ("dense", "hierarchical", "compressed",
-                 "hierarchical_compressed"):
-        comm = dataclasses.replace(cfg.moe.comm, substrate=name,
-                                   quant=quant)
-        out[name] = step_cost(cfg, tokens_per_shard=tokens_per_shard,
-                              ep=ep, comm=comm, is_training=is_training)
+    for name in available_substrates():
+        comm = dataclasses.replace(
+            cfg.moe.comm, substrate=name, quant=quant,
+            n_chunks=n_chunks or cfg.moe.comm.n_chunks)
+        c = step_cost(cfg, tokens_per_shard=tokens_per_shard,
+                      ep=ep, comm=comm, is_training=is_training)
+        t = transport_time(c, topology or comm.topology)
+        c["t_comm_s"] = t["comm_s"]
+        c["t_exposed_s"] = t["exposed_s"]
+        out[name] = c
     return out
 
 
 def format_table(table: Dict[str, Dict[str, float]]) -> str:
-    """Human-readable substrate comparison (MiB per device per step)."""
-    hdr = (f"{'substrate':<26}{'a2a':>5}{'bytes MiB':>12}"
-           f"{'wire MiB':>11}{'inter MiB':>11}{'vs dense':>10}")
+    """Human-readable substrate comparison (MiB per device per step);
+    ``exp MiB`` is the structurally exposed (non-overlappable) wire and
+    ``t_exp`` its two-tier bandwidth-weighted time (DESIGN.md §14)."""
+    hdr = (f"{'substrate':<36}{'a2a':>5}{'bytes MiB':>12}"
+           f"{'wire MiB':>11}{'inter MiB':>11}{'exp MiB':>10}"
+           f"{'t_comm ms':>11}{'t_exp ms':>10}{'vs dense':>10}")
     lines = [hdr, "-" * len(hdr)]
     base = table.get("dense", {}).get("wire_bytes", 0.0) or math.inf
     for name, c in table.items():
         rel = c["wire_bytes"] / base if base else 0.0
+        exposed = c.get("exposed_wire_bytes", c["wire_bytes"])
+        t_comm = c.get("t_comm_s", 0.0) * 1e3
+        t_exp = c.get("t_exposed_s", 0.0) * 1e3
         lines.append(
-            f"{name:<26}{int(c['calls']):>5}{c['bytes']/2**20:>12.2f}"
+            f"{name:<36}{int(c['calls']):>5}{c['bytes']/2**20:>12.2f}"
             f"{c['wire_bytes']/2**20:>11.2f}"
-            f"{c['inter_wire_bytes']/2**20:>11.2f}{rel:>9.2f}x")
+            f"{c['inter_wire_bytes']/2**20:>11.2f}"
+            f"{exposed/2**20:>10.2f}{t_comm:>11.3f}{t_exp:>10.3f}"
+            f"{rel:>9.2f}x")
     return "\n".join(lines)

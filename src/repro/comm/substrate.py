@@ -30,6 +30,24 @@ registry), selected by ``MoEConfig.comm`` (`CommConfig`):
   hierarchical_compressed -- both composed: quantize once, carry the int8
                              payload + scales through both hops,
                              dequantize once.
+  overlapped[...]         -- any of the above, micro-chunked (DESIGN.md
+                             §14): the (E, cap, d) payload splits into
+                             ``CommConfig.n_chunks`` pieces along the
+                             capacity axis and the chunks run through a
+                             double-buffered software pipeline — the
+                             dispatch of chunk i+1 and the combine of
+                             chunk i-1 are issued around the expert FFN
+                             of chunk i, so XLA's scheduler can hide
+                             them behind the compute. The pipeline is an
+                             UNROLLED Python loop (static chunk count):
+                             the compiled HLO contains n_eff distinct
+                             per-chunk collectives per hop, keeping the
+                             telemetry == parsed-HLO invariant countable.
+                             Each chunk is the same permutation its base
+                             substrate performs and the expert FFN is
+                             per-capacity-row independent, so the result
+                             stays BITWISE-equal to the base substrate
+                             (pinned in tests, like hierarchical).
 
 Every substrate exposes the transport in two execution modes so the whole
 matrix is testable on CPU:
@@ -64,9 +82,9 @@ from repro.comm import cost as C
 from repro.comm.cost import ep_tier_groups, factored_ep
 from repro.configs.base import CommConfig
 
-__all__ = ["CommConfig", "CommEnv", "Transport", "available_substrates",
-           "comm_zero", "get_substrate", "make_transport",
-           "register_substrate"]
+__all__ = ["CommConfig", "CommEnv", "OverlappedTransport", "Transport",
+           "available_substrates", "comm_zero", "get_substrate",
+           "make_transport", "register_substrate"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,17 +294,96 @@ class Transport:
             self.vcombine = topo.vcombine
             self.roundtrip = lambda x: x
 
+    def pipelined(self, buf: jax.Array, fn: Callable) -> jax.Array:
+        """The §14 transport contract: run ``dispatch -> fn -> combine``
+        as ONE transaction, with the grouped-FFN body handed in as a
+        per-chunk callable so overlapped substrates can interleave its
+        chunks with the wire. Non-overlapped substrates are the trivial
+        one-chunk case."""
+        return self.combine(fn(self.dispatch(buf)))
+
+    def vpipelined(self, bufs: jax.Array, fn: Callable) -> jax.Array:
+        """``pipelined`` over the oracle's stacked (ep, E, cap, d)
+        virtual emulation."""
+        return self.vcombine(fn(self.vdispatch(bufs)))
+
     def telemetry(self, n_experts: int, cap: int, d_model: int,
                   itemsize: int) -> Dict[str, jax.Array]:
         """In-graph (constant) telemetry for one layer's transport —
-        the §10 counters, straight from the analytic model."""
+        the §10/§14 counters, straight from the analytic model.
+        ``comm_exposed_bytes``/``comm_hidden_bytes`` split the wire into
+        the structurally non-overlappable fraction (the pipeline's edge
+        chunks) and the remainder a chunked schedule can hide behind
+        expert compute; non-overlapped substrates expose everything."""
         c = C.transport_cost(self.comm, ep=self.env.ep, n_experts=n_experts,
                              cap=cap, d_model=d_model, itemsize=itemsize,
                              tiers=self.topo.tiers)
         return {"comm_a2a_calls": jnp.asarray(c["calls"], jnp.float32),
                 "comm_bytes": jnp.asarray(c["bytes"], jnp.float32),
                 "comm_wire_bytes": jnp.asarray(c["wire_bytes"],
-                                               jnp.float32)}
+                                               jnp.float32),
+                "comm_exposed_bytes": jnp.asarray(c["exposed_wire_bytes"],
+                                                  jnp.float32),
+                "comm_hidden_bytes": jnp.asarray(c["hidden_wire_bytes"],
+                                                 jnp.float32)}
+
+
+class OverlappedTransport(Transport):
+    """Micro-chunked pipeline over any base topology (DESIGN.md §14).
+
+    ``pipelined`` splits the (E, cap, d) payload into
+    ``effective_chunks(cap, n_chunks)`` slices along the capacity axis
+    and issues, per chunk i: dispatch(i+1) — prefetching the next
+    chunk's wire — then FFN(i), then combine(i) (which overlaps
+    FFN(i+1) on the next iteration). The loop is UNROLLED over the
+    static chunk count so each per-chunk collective is a distinct HLO op
+    (a lax.scan body would be counted once by the HLO walker, breaking
+    the telemetry == parsed-HLO invariant) and so XLA's latency-hiding
+    scheduler is free to slide the collectives behind the grouped
+    matmuls.
+
+    Bitwise equality with the base substrate holds because (a) each
+    chunk undergoes the exact permutation the base substrate applies —
+    dense's dispatched axis-1 layout is (src_rank, cap), so chunk i is
+    precisely the [:, i*cc:(i+1)*cc] capacity slice of every source's
+    block — (b) the expert FFN is independent per capacity row, and
+    (c) the compressed pair's quantization scales are per (expert, slot)
+    row, so quantizing chunkwise equals quantizing once then slicing."""
+
+    def _n_chunks(self, cap: int) -> int:
+        return C.effective_chunks(cap, self.comm.n_chunks)
+
+    def pipelined(self, buf: jax.Array, fn: Callable) -> jax.Array:
+        n = self._n_chunks(buf.shape[1])
+        if n == 1:
+            return self.combine(fn(self.dispatch(buf)))
+        cc = buf.shape[1] // n
+        chunks = [buf[:, i * cc:(i + 1) * cc] for i in range(n)]
+        disp = [None] * n
+        outs = [None] * n
+        disp[0] = self.dispatch(chunks[0])
+        for i in range(n):
+            if i + 1 < n:                  # prefetch next chunk's wire
+                disp[i + 1] = self.dispatch(chunks[i + 1])
+            y = fn(disp[i])
+            outs[i] = self.combine(y)      # overlaps FFN(i+1)
+        return jnp.concatenate(outs, axis=1)
+
+    def vpipelined(self, bufs: jax.Array, fn: Callable) -> jax.Array:
+        n = self._n_chunks(bufs.shape[2])
+        if n == 1:
+            return self.vcombine(fn(self.vdispatch(bufs)))
+        cc = bufs.shape[2] // n
+        chunks = [bufs[:, :, i * cc:(i + 1) * cc] for i in range(n)]
+        disp = [None] * n
+        outs = [None] * n
+        disp[0] = self.vdispatch(chunks[0])
+        for i in range(n):
+            if i + 1 < n:
+                disp[i + 1] = self.vdispatch(chunks[i + 1])
+            y = fn(disp[i])
+            outs[i] = self.vcombine(y)
+        return jnp.concatenate(outs, axis=2)
 
 
 def comm_zero() -> Dict[str, jax.Array]:
@@ -294,7 +391,9 @@ def comm_zero() -> Dict[str, jax.Array]:
     expert-drop / dense-FFN layers)."""
     return {"comm_a2a_calls": jnp.zeros((), jnp.float32),
             "comm_bytes": jnp.zeros((), jnp.float32),
-            "comm_wire_bytes": jnp.zeros((), jnp.float32)}
+            "comm_wire_bytes": jnp.zeros((), jnp.float32),
+            "comm_exposed_bytes": jnp.zeros((), jnp.float32),
+            "comm_hidden_bytes": jnp.zeros((), jnp.float32)}
 
 
 # ---------------------------------------------------------------------------
@@ -348,3 +447,24 @@ def _compressed(comm: CommConfig, env: CommEnv) -> Transport:
 @register_substrate("hierarchical_compressed")
 def _hierarchical_compressed(comm: CommConfig, env: CommEnv) -> Transport:
     return Transport(comm, env, _FactoredTopo(comm, env))
+
+
+@register_substrate("overlapped")
+def _overlapped(comm: CommConfig, env: CommEnv) -> Transport:
+    return OverlappedTransport(comm, env, _FlatTopo(env))
+
+
+@register_substrate("overlapped_hierarchical")
+def _overlapped_hierarchical(comm: CommConfig, env: CommEnv) -> Transport:
+    return OverlappedTransport(comm, env, _FactoredTopo(comm, env))
+
+
+@register_substrate("overlapped_compressed")
+def _overlapped_compressed(comm: CommConfig, env: CommEnv) -> Transport:
+    return OverlappedTransport(comm, env, _FlatTopo(env))
+
+
+@register_substrate("overlapped_hierarchical_compressed")
+def _overlapped_hierarchical_compressed(comm: CommConfig,
+                                        env: CommEnv) -> Transport:
+    return OverlappedTransport(comm, env, _FactoredTopo(comm, env))

@@ -237,11 +237,12 @@ def _routed_shard(wr, experts, xf, moe: MoEConfig, cfg: ModelConfig, rng,
         buf = R.dispatch(xf, info, E, cap)                   # (E, cap, d)
     comm_t = transport.telemetry(E, cap, xf.shape[-1],
                                  jnp.dtype(buf.dtype).itemsize)
-    # dispatch wire: (E, cap, d) -> (E/ep, ep*cap, d)
-    buf = transport.dispatch(buf)
-    out = _expert_ffn(experts, buf, cfg, tp_axis)
-    # combine wire: (E/ep, ep*cap, d) -> (E, cap, d)
-    out = transport.combine(out)
+    # dispatch wire -> grouped FFN -> combine wire, as ONE transport
+    # transaction (DESIGN.md §14): (E, cap, d) -> (E/ep, ep*cap, d) ->
+    # FFN -> (E, cap, d). Overlapped substrates chunk the capacity axis
+    # and pipeline the per-chunk collectives behind the FFN body.
+    out = transport.pipelined(
+        buf, lambda b: _expert_ffn(experts, b, cfg, tp_axis))
     y = (K.moe_combine_op(out, info, tables=tables) if K.KERNELS_ENABLED
          else R.combine(out, info))
     return y, _routed_aux(rr, info, moe, comm=comm_t)
@@ -318,10 +319,10 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
             shard_dispatch, in_axes=(0, 0, 0 if tok is not None else None,
                                      0 if tv is not None else None))(
             jnp.arange(ep), xs, tok, tv)
-        # virtual wire (substrate emulation): (ep, E, cap, d) -> (E, ep*cap, d)
-        gbuf = transport.vdispatch(bufs)
-        gout = _expert_ffn(experts, gbuf, cfg, None)
-        outs = transport.vcombine(gout)
+        # virtual wire (substrate emulation), one pipelined transaction:
+        # (ep, E, cap, d) -> (E, ep*cap, d) -> FFN -> (ep, E, cap, d)
+        outs = transport.vpipelined(
+            bufs, lambda b: _expert_ffn(experts, b, cfg, None))
         y = jax.vmap(R.combine)(outs, infos)
         aux = {
             "balance": jax.vmap(lambda r: R.balance_loss(r, moe))(rrs).mean()

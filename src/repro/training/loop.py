@@ -263,6 +263,13 @@ class Trainer:
                             ms["comm_wire_bytes"][j])
                         rec["comm_a2a_calls"] = float(
                             ms["comm_a2a_calls"][j])
+                        # exposed vs hidden wire (DESIGN.md §14): what an
+                        # overlapped substrate could NOT pipeline behind
+                        # expert compute this step
+                        rec["comm_exposed_bytes"] = float(
+                            ms["comm_exposed_bytes"][j])
+                        rec["comm_hidden_bytes"] = float(
+                            ms["comm_hidden_bytes"][j])
                     if i in eval_steps:   # schedule guarantees i == e - 1
                         rec.update(self.eval_fn(self.state, i))
                     self.history.append(rec)

@@ -127,7 +127,12 @@ def total_loss(params, batch, cfg: ModelConfig, ctx, *, rng, decision,
                        dropped_frac=aux["dropped_frac"] / nmoe,
                        comm_a2a_calls=aux["comm_a2a_calls"],
                        comm_bytes=aux["comm_bytes"],
-                       comm_wire_bytes=aux["comm_wire_bytes"])
+                       comm_wire_bytes=aux["comm_wire_bytes"],
+                       # §14 split: wire the chunked pipeline can hide
+                       # behind expert compute vs the structurally
+                       # exposed remainder (= wire for non-overlapped)
+                       comm_exposed_bytes=aux["comm_exposed_bytes"],
+                       comm_hidden_bytes=aux["comm_hidden_bytes"])
     if cfg.mtp and is_training and "mtp_hidden" in aux:
         labels2 = jnp.roll(labels, -1, axis=1)
         m2 = (mask if mask is not None else jnp.ones_like(labels, jnp.float32))

@@ -48,17 +48,27 @@ def _xp(cfg, shape=(8, 16, 32)):
 # ---------------------------------------------------------------- registry
 
 def test_registry_contents_and_errors():
-    assert set(available_substrates()) == {
-        "dense", "hierarchical", "compressed", "hierarchical_compressed"}
+    from repro.configs.base import COMM_SUBSTRATES
+    assert set(available_substrates()) == set(COMM_SUBSTRATES) == {
+        "dense", "hierarchical", "compressed", "hierarchical_compressed",
+        "overlapped", "overlapped_hierarchical", "overlapped_compressed",
+        "overlapped_hierarchical_compressed"}
     with pytest.raises(KeyError, match="unknown comm substrate"):
         get_substrate("nope")
     with pytest.raises(AssertionError):
         CommConfig(substrate="nope")
     with pytest.raises(AssertionError):
         CommConfig(quant="int4")
+    with pytest.raises(AssertionError):
+        CommConfig(n_chunks=0)
     c = CommConfig(substrate="hierarchical_compressed")
-    assert c.hierarchical and c.compressed
+    assert c.hierarchical and c.compressed and not c.overlapped
     assert not CommConfig().hierarchical and not CommConfig().compressed
+    o = CommConfig(substrate="overlapped_hierarchical_compressed")
+    assert o.overlapped and o.hierarchical and o.compressed
+    assert CommConfig(substrate="overlapped").overlapped
+    assert not CommConfig(substrate="overlapped").hierarchical
+    assert not CommConfig(substrate="overlapped").compressed
 
 
 def test_factored_ep_and_tier_groups():
@@ -238,12 +248,118 @@ def test_cost_model_hand_computed():
     assert h1["calls"] == 2                     # gi=1 intra hop skipped
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_roundtrip_identity_every_substrate(dtype):
+    """§14 round-trip property: dispatch∘combine is a pure permutation
+    pair, so the transport round trip with an identity FFN body is
+    BITWISE identity — for EVERY substrate x ep shape x chunk count,
+    including the all-dropped (zero) buffer. Compressed substrates hold
+    it on the quantizer's fixed points (one ``roundtrip`` application is
+    idempotent — also asserted), so the payload is stabilized first."""
+    from repro.comm.substrate import CommEnv, make_transport
+    for ep, E, cap, d in ((2, 8, 4, 16), (4, 8, 6, 8), (8, 8, 4, 16)):
+        x = (jax.random.normal(jax.random.PRNGKey(ep), (ep, E, cap, d))
+             * 3).astype(dtype)
+        for name in available_substrates():
+            for n_chunks in (1, 2, cap):
+                comm = CommConfig(substrate=name, n_chunks=n_chunks)
+                t = make_transport(comm, CommEnv(ep=ep))
+                for buf in (x, jnp.zeros_like(x)):
+                    ref = t.roundtrip(buf)          # fixed-point payload
+                    np.testing.assert_array_equal(
+                        np.asarray(t.roundtrip(ref), np.float32),
+                        np.asarray(ref, np.float32),
+                        err_msg=f"roundtrip not idempotent: {name}")
+                    out = t.vpipelined(ref, lambda b: b)
+                    np.testing.assert_array_equal(
+                        np.asarray(out, np.float32),
+                        np.asarray(ref, np.float32),
+                        err_msg=f"{name} ep={ep} cap={cap} n={n_chunks}")
+    # the sweep leaves thousands of small chunk-shaped executables in the
+    # process-wide jit cache; drop them so the rest of the suite compiles
+    # against a clean CPU client (avoids late-suite compiler OOM/segfault)
+    jax.clear_caches()
+
+
+def test_chunked_cost_invariants_every_substrate():
+    """§14 accounting regression: overlapping multiplies the a2a CALL
+    count by n_eff but leaves total bytes / wire / tier split EXACTLY
+    equal to the base substrate (the per-chunk payload divides evenly —
+    integer arithmetic, no approx); exposed = wire/n_eff with hidden the
+    remainder; non-overlapped substrates expose everything and hide
+    nothing."""
+    from repro.comm import effective_chunks
+    E, cap, d, isz, ep = 8, 8, 32, 4, 8
+    kw = dict(ep=ep, n_experts=E, cap=cap, d_model=d, itemsize=isz)
+    for base in ("dense", "hierarchical", "compressed",
+                 "hierarchical_compressed"):
+        ov = "overlapped" if base == "dense" else f"overlapped_{base}"
+        c0 = transport_cost(CommConfig(substrate=base), **kw)
+        assert c0["exposed_wire_bytes"] == c0["wire_bytes"], base
+        assert c0["hidden_wire_bytes"] == 0.0, base
+        for n in (1, 2, 4, 8, 5):                   # 5 -> n_eff 4
+            n_eff = effective_chunks(cap, n)
+            cN = transport_cost(CommConfig(substrate=ov, n_chunks=n), **kw)
+            assert cN["calls"] == c0["calls"] * n_eff, (ov, n)
+            assert cN["bytes"] == c0["bytes"], (ov, n)
+            assert cN["wire_bytes"] == c0["wire_bytes"], (ov, n)
+            assert cN["intra_wire_bytes"] == c0["intra_wire_bytes"], (ov, n)
+            assert cN["inter_wire_bytes"] == c0["inter_wire_bytes"], (ov, n)
+            assert cN["exposed_wire_bytes"] == pytest.approx(
+                cN["wire_bytes"] / n_eff), (ov, n)
+            assert (cN["exposed_wire_bytes"] + cN["hidden_wire_bytes"]
+                    == pytest.approx(cN["wire_bytes"])), (ov, n)
+    # the chunk-count rule the transport and cost model share
+    assert effective_chunks(16, 5) == 4
+    assert effective_chunks(16, 16) == 16
+    assert effective_chunks(16, 100) == 16          # clamped to cap
+    assert effective_chunks(7, 3) == 1              # prime cap
+    assert effective_chunks(6, 4) == 3
+
+
+def test_transport_time_and_pipeline_time():
+    """The §14 bandwidth-weighted time model: intra wire priced at the
+    ICI-class rate, inter at the DCN-class rate; the two-resource FIFO
+    pipeline estimate equals the hand-computed schedule."""
+    from repro.comm import pipeline_time, transport_time
+    from repro.configs.base import Topology
+    top = Topology(intra_gbps=400.0, inter_gbps=50.0)
+    E, cap, d, isz, ep = 8, 4, 32, 4, 8
+    kw = dict(ep=ep, n_experts=E, cap=cap, d_model=d, itemsize=isz)
+    c = transport_cost(CommConfig(substrate="hierarchical"), **kw)
+    t = transport_time(c, top)
+    assert t["comm_s"] == pytest.approx(
+        c["intra_wire_bytes"] / 400e9 + c["inter_wire_bytes"] / 50e9)
+    assert t["exposed_s"] == pytest.approx(t["comm_s"])  # non-overlapped
+    cd = transport_cost(CommConfig(substrate="dense"), **kw)
+    td = transport_time(cd, top)
+    assert td["comm_s"] == pytest.approx(cd["wire_bytes"] / 50e9)
+    # hierarchical moves MORE wire yet costs LESS time on the two-tier
+    # mesh — the whole point of the factored exchange
+    assert c["wire_bytes"] > cd["wire_bytes"]
+    assert t["comm_s"] < td["comm_s"]
+    co = transport_cost(CommConfig(substrate="overlapped", n_chunks=4),
+                        **kw)
+    to = transport_time(co, top)
+    assert to["comm_s"] == pytest.approx(td["comm_s"])   # same wire
+    assert to["exposed_s"] == pytest.approx(td["comm_s"] / 4)
+    assert to["hidden_s"] == pytest.approx(3 * td["comm_s"] / 4)
+    # FIFO pipeline: n=1 is fully serial; W==C at n=4 hand-computes to
+    # 1.25 (vs 2.0 serial -> 1.6x); deeper never hurts; comm-bound floor
+    assert pipeline_time(1.0, 1.0, 1) == pytest.approx(2.0)
+    assert pipeline_time(1.0, 1.0, 4) == pytest.approx(1.25)
+    assert (pipeline_time(1.0, 1.0, 8) <= pipeline_time(1.0, 1.0, 4)
+            <= pipeline_time(1.0, 1.0, 2) <= 2.0)
+    assert pipeline_time(0.1, 1.0, 8) >= 1.0         # can't beat the wire
+    assert pipeline_time(1.0, 0.1, 8) >= 1.0         # ... or the compute
+
+
 def test_substrate_table_and_dryrun_comm_table():
     """The --comm-table surface: every substrate priced, compressed
     halves the wire (plus the tiny scale overhead), hierarchical moves
     its inter-tier share below dense's all-inter wire."""
     cfg = _cfg()
-    t = substrate_table(cfg, tokens_per_shard=64, ep=16)
+    t = substrate_table(cfg, tokens_per_shard=64, ep=16, n_chunks=4)
     assert set(t) == set(available_substrates())
     dense = t["dense"]
     assert t["compressed"]["wire_bytes"] <= 0.55 * dense["wire_bytes"]
@@ -251,6 +367,13 @@ def test_substrate_table_and_dryrun_comm_table():
             < dense["inter_wire_bytes"])
     assert (t["hierarchical_compressed"]["inter_wire_bytes"]
             < t["compressed"]["inter_wire_bytes"])
+    # §14 columns: overlapped rows expose wire/n_eff of identical totals
+    # and carry a strictly smaller exposed-time estimate
+    ov = t["overlapped"]
+    assert ov["wire_bytes"] == dense["wire_bytes"]
+    assert ov["exposed_wire_bytes"] < dense["exposed_wire_bytes"]
+    assert ov["t_comm_s"] == pytest.approx(dense["t_comm_s"])
+    assert ov["t_exposed_s"] < dense["t_exposed_s"]
     txt = format_table(t)
     for name in t:
         assert name in txt
@@ -317,8 +440,9 @@ p = init_moe_params(jax.random.PRNGKey(0), cfg_with(CommConfig()))
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
 ys = {}
 for name in ('dense', 'hierarchical', 'compressed',
-             'hierarchical_compressed'):
-    comm = CommConfig(substrate=name)
+             'hierarchical_compressed', 'overlapped',
+             'overlapped_hierarchical_compressed'):
+    comm = CommConfig(substrate=name, n_chunks=2)
     cfg = cfg_with(comm)
     f = jax.jit(lambda p_, x_: moe_sharded(p_, x_, cfg, ctx, rng=None,
                                            decision=False))
@@ -331,9 +455,17 @@ for name in ('dense', 'hierarchical', 'compressed',
     assert float(aux['comm_bytes']) == colls['bytes'] == c['bytes'], name
     assert abs(float(aux['comm_wire_bytes']) - colls['wire_bytes']) < 1, name
     assert abs(float(aux['comm_wire_bytes']) - c['wire_bytes']) < 1, name
+    assert (float(aux['comm_exposed_bytes'] + aux['comm_hidden_bytes'])
+            == float(aux['comm_wire_bytes'])), name
 
 assert np.array_equal(ys['dense'], ys['hierarchical'])
 assert np.array_equal(ys['compressed'], ys['hierarchical_compressed'])
+# §14: the micro-chunked pipeline is BITWISE its base substrate — and the
+# unrolled per-chunk collectives really are distinct HLO ops (2 hops x 2
+# chunks for overlapped vs dense's 2; x2 again for the factored hops)
+assert np.array_equal(ys['dense'], ys['overlapped'])
+assert np.array_equal(ys['compressed'],
+                      ys['overlapped_hierarchical_compressed'])
 scale = np.abs(ys['dense']).max()
 assert np.abs(ys['dense'] - ys['compressed']).max() < 0.05 * scale
 
