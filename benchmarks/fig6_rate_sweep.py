@@ -17,15 +17,20 @@ import jax.numpy as jnp
 from benchmarks.common import V100_IB, csv_row, run_trainer
 from repro.configs import get_config, reduced
 from repro.configs.base import GatingDropoutConfig, TrainConfig
+from repro.obs import router_health
 from repro.training import make_eval_step
 from benchmarks.table3_throughput import step_terms
 
 
-def quality(rate: float, *, steps: int, batch: int, seed: int = 0) -> float:
+def quality(rate: float, *, steps: int, batch: int, seed: int = 0):
     """Final-accuracy probe per dropout rate, trained through the
     scan-fused Trainer. traced_cond: the decision stream is the same
     (seed, step) fold either way, and one executable per chunk length
-    keeps the 6-rate sweep's compile cost sane."""
+    keeps the 6-rate sweep's compile cost sane.
+
+    Returns (acc, router_health) — the health dict (mean entropy, load
+    imbalance, realized drop rate from the in-graph MetricsFrame) shows
+    WHY quality moves with p, not just that it does."""
     cfg = reduced(get_config("zcode-m3-base"))
     mode = "gate_expert_drop" if rate > 0 else "off"
     moe = dataclasses.replace(cfg.moe, gating_dropout=GatingDropoutConfig(
@@ -33,12 +38,12 @@ def quality(rate: float, *, steps: int, batch: int, seed: int = 0) -> float:
     cfg = dataclasses.replace(cfg, moe=moe)
     tc = TrainConfig(lr=2e-3, warmup_steps=max(steps // 10, 10), steps=steps,
                      seed=seed)
-    state, task, _ = run_trainer(cfg, tc, batch=batch,
-                                 strategy="traced_cond")
+    state, task, history = run_trainer(cfg, tc, batch=batch,
+                                       strategy="traced_cond")
     ev = make_eval_step(cfg)
     vb = {k: jnp.asarray(v) for k, v in task.sample_batch(77_000, 64).items()
           if k != "lang"}
-    return float(ev(state["params"], vb)["acc"])
+    return float(ev(state["params"], vb)["acc"]), router_health(history)
 
 
 def model_throughput(rate: float) -> float:
@@ -68,15 +73,22 @@ def main(fast: bool = True):
     base_acc = None
     out = {}
     for p in rates:
-        acc = quality(p, steps=steps, batch=batch)
+        acc, health = quality(p, steps=steps, batch=batch)
         if base_acc is None:
             base_acc = acc
         tp = model_throughput(p)
         out[p] = {"acc": acc, "acc_delta": acc - base_acc,
                   "model_tok_s": tp}
+        hnote = ""
+        if health["records"]:
+            out[p].update({f"router_{k}": v for k, v in health.items()
+                           if k != "records"})
+            hnote = (f";entropy={health['router_entropy']:.3f}"
+                     f";imbalance={health['load_imbalance']:.2f}"
+                     f";drop_rate={health['gate_drop_rate']:.2f}")
         csv_row(f"fig6/p{p:.1f}", 0.0,
                 f"acc={acc:.3f};delta={acc-base_acc:+.3f};"
-                f"model_tok_s={tp:.0f}")
+                f"model_tok_s={tp:.0f}" + hnote)
     return out
 
 

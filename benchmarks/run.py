@@ -75,6 +75,11 @@ def bench_table11(fast):
     return main(fast)
 
 
+def bench_table12(fast):
+    from benchmarks.table12_obs import main
+    return main(fast)
+
+
 def bench_roofline(fast):
     from benchmarks.roofline import analyze, bottleneck_note, load_joined
     recs = load_joined("pod256")
@@ -120,6 +125,7 @@ BENCHES = {
     "table9": bench_table9,
     "table10": bench_table10,
     "table11": bench_table11,
+    "table12": bench_table12,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }

@@ -1,0 +1,204 @@
+"""Table 12 (beyond paper): observability overhead — tracer + MetricsFrame.
+
+The acceptance claim of the DESIGN.md §15 observability layer: turning
+EVERYTHING on (span tracer enabled, in-graph MetricsFrame on, scheduler
+registry live) costs < 2% end-to-end against the fully-dark
+configuration, and the MetricsFrame changes no computed number — the
+per-step losses are BITWISE identical with the frame on and off.
+
+Two measurements, both warmed and interleaved (min-of-reps, so a single
+scheduler hiccup on one variant cannot fake an overhead):
+
+  train — the table7 train config (reduced zcode-m3-base, gate_drop 0.3,
+      traced_cond). Timed at the Trainer._dispatch level: one scan-fused
+      chunk per rep, baseline = (tracer disabled, metrics_frame=False) vs
+      instrumented = (tracer enabled, metrics_frame=True).
+  serve — a table8-style backlogged mixed trace through
+      ContinuousScheduler, baseline = disabled tracer vs instrumented =
+      enabled tracer + live registry. Greedy per-request token parity
+      across the two runs is asserted.
+
+Writes benchmarks/artifacts/table12_obs.json (schema:
+benchmarks/README.md). Gate: overhead < 2% on both sides, bitwise loss
+equality, serve token parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ART, csv_row
+from repro.configs import get_config, reduced
+from repro.configs.base import GatingDropoutConfig, TrainConfig
+from repro.data import MTTaskConfig, MultilingualMT, stack_batches
+from repro.models import init_model
+from repro.obs import Tracer, MetricsRegistry
+from repro.serve import ContinuousScheduler, GenerateConfig, Request
+from repro.training import Trainer
+
+# table7's shape: small per-step device work ON PURPOSE — per-chunk host
+# overhead (what the tracer could inflate) is a fixed cost, and it must
+# stay invisible even when the device step is only milliseconds
+BATCH, SEQ, CHUNK = 2, 10, 16
+OVERHEAD_BAR = 0.02
+
+
+def _train_cfg():
+    cfg = reduced(get_config("zcode-m3-base"), d_model=64, d_ff=128,
+                  vocab=256, n_heads=2, n_kv_heads=2, head_dim=32)
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, d_ff_expert=128,
+        gating_dropout=GatingDropoutConfig(mode="gate_drop", rate=0.3)))
+
+
+def _trainer(cfg, *, frame: bool, traced: bool):
+    tc = TrainConfig(lr=1e-3, warmup_steps=10, steps=CHUNK, seed=0,
+                     metrics_frame=frame)
+    task = MultilingualMT(MTTaskConfig(vocab=cfg.vocab, n_langs=8,
+                                       max_len=SEQ, src_len=(4, 8)))
+    tr = Trainer(cfg, tc, task.train_batches(BATCH), chunk=CHUNK,
+                 strategy="traced_cond", log=None,
+                 tracer=Tracer(enabled=traced))
+    stacked = stack_batches(tr.batch_fn, 0, CHUNK)
+    tr._dispatch((0, CHUNK), stacked)          # compile off the clock
+    return tr, stacked
+
+
+def bench_train(reps: int = 5):
+    """min-of-reps chunk dispatch time, baseline vs fully instrumented."""
+    cfg = _train_cfg()
+    base, b_batch = _trainer(cfg, frame=False, traced=False)
+    inst, i_batch = _trainer(cfg, frame=True, traced=True)
+    t_off, t_on = [], []
+    for _ in range(reps):                      # interleaved pairs
+        t0 = time.perf_counter()
+        base._dispatch((0, CHUNK), b_batch)
+        t_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        inst._dispatch((0, CHUNK), i_batch)
+        t_on.append(time.perf_counter() - t0)
+    return min(t_off), min(t_on)
+
+
+def check_train_bitwise():
+    """Frame on vs off from identical init: the telemetry switch must not
+    move one bit of the computed loss/acc stream."""
+    cfg = _train_cfg()
+    ms = {}
+    for frame in (False, True):
+        tr, stacked = _trainer(cfg, frame=frame, traced=False)
+        ms[frame] = tr._dispatch((CHUNK, 2 * CHUNK),
+                                 stack_batches(tr.batch_fn, CHUNK,
+                                               2 * CHUNK))
+    loss_eq = np.array_equal(ms[False]["loss"], ms[True]["loss"])
+    acc_eq = np.array_equal(ms[False]["acc"], ms[True]["acc"])
+    frame_keys = set(ms[True]) - set(ms[False])
+    return loss_eq and acc_eq, sorted(frame_keys)
+
+
+def _serve_cfg():
+    cfg = reduced(get_config("yi-6b"), d_model=128, n_layers=2, d_ff=256,
+                  head_dim=64)
+    if cfg.moe is not None:                    # placement-invariant MoE
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, eval_capacity_factor=float(cfg.moe.n_experts)))
+    return cfg
+
+
+def _trace(cfg, n: int = 8):
+    rs = np.random.RandomState(7)
+    reqs = []
+    for i in range(n):
+        plen = (4, 6, 8)[i % 3]
+        toks = rs.randint(3, cfg.vocab, size=plen).astype(np.int32)
+        reqs.append(Request(rid=i, tokens=toks,
+                            max_new=int(rs.randint(4, 17)), arrival=0.0))
+    return reqs
+
+
+def _serve_once(params, cfg, gen, reqs, *, traced: bool):
+    sched = ContinuousScheduler(params, cfg, gen, n_slots=4,
+                                prefill_buckets=(8,),
+                                registry=MetricsRegistry(),
+                                tracer=Tracer(enabled=traced))
+    t0 = time.perf_counter()
+    results = sched.run(reqs)
+    return time.perf_counter() - t0, {r.rid: r.tokens for r in results}
+
+
+def bench_serve(reps: int = 8):
+    cfg = _serve_cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new=16, eos_id=-1)
+    reqs = _trace(cfg)
+    _serve_once(params, cfg, gen, reqs, traced=False)   # compile off-clock
+    t_off, t_on, parity = [], [], True
+    for _ in range(reps):                               # interleaved pairs
+        w0, toks0 = _serve_once(params, cfg, gen, reqs, traced=False)
+        w1, toks1 = _serve_once(params, cfg, gen, reqs, traced=True)
+        t_off.append(w0)
+        t_on.append(w1)
+        parity = parity and all(np.array_equal(toks0[r], toks1[r])
+                                for r in toks0)
+    return min(t_off), min(t_on), parity
+
+
+def main(fast: bool = True):
+    reps = 5 if fast else 9
+    tr_off, tr_on = bench_train(reps)
+    train_over = tr_on / tr_off - 1.0
+    bitwise, frame_keys = check_train_bitwise()
+    # scheduler wall clocks are noisy (±10% per run on a shared CPU);
+    # 8 interleaved pairs lets min-of-reps converge on the real floor
+    sv_off, sv_on, parity = bench_serve(8 if fast else 12)
+    serve_over = sv_on / sv_off - 1.0
+
+    csv_row("table12/train_chunk_off", tr_off * 1e6,
+            f"instrumented_us={tr_on*1e6:.0f};overhead={train_over:+.3%}")
+    csv_row("table12/serve_trace_off", sv_off * 1e6,
+            f"instrumented_us={sv_on*1e6:.0f};overhead={serve_over:+.3%}")
+
+    assert bitwise, "MetricsFrame changed the computed loss/acc stream"
+    assert parity, "tracer changed served tokens"
+    # the acceptance bar this table exists to hold: full observability
+    # under 2% end-to-end (min-of-reps; negative = measurement noise)
+    assert train_over < OVERHEAD_BAR, \
+        f"train observability overhead {train_over:.3%} >= 2%"
+    assert serve_over < OVERHEAD_BAR, \
+        f"serve observability overhead {serve_over:.3%} >= 2%"
+
+    out = {
+        "config": {"train": "zcode-m3-base(reduced, d_model=64) "
+                            "gate_drop@0.3 traced_cond",
+                   "serve": "yi-6b(reduced, d_model=128) greedy backlog",
+                   "batch": BATCH, "seq": SEQ, "chunk": CHUNK,
+                   "overhead_bar": OVERHEAD_BAR},
+        "train": {"baseline_s": tr_off, "instrumented_s": tr_on,
+                  "overhead_frac": train_over,
+                  "bitwise_loss_equal": bool(bitwise),
+                  "frame_only_keys": frame_keys},
+        "serve": {"baseline_s": sv_off, "instrumented_s": sv_on,
+                  "overhead_frac": serve_over,
+                  "token_parity": bool(parity)},
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "table12_obs.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI alias: run the fast benchmark (the asserts "
+                         "ARE the gate)")
+    args = ap.parse_args()
+    res = main(fast=not args.full)
+    print(json.dumps(res, indent=1))

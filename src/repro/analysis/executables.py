@@ -207,7 +207,8 @@ def _build_moe_layer(substrate: str, decision: bool):
 
 
 def _build_train_chunk(decision: bool,
-                       substrate: str = "hierarchical_compressed"):
+                       substrate: str = "hierarchical_compressed",
+                       frame: bool = True):
     def build():
         import jax
         import jax.numpy as jnp
@@ -218,7 +219,8 @@ def _build_train_chunk(decision: bool,
         from repro.training.loop import make_chunk_step
         from repro.training.steps import init_train_state
         cfg = _train_cfg(substrate)
-        tc = TrainConfig(lr=1e-3, warmup_steps=4, seed=0)
+        tc = TrainConfig(lr=1e-3, warmup_steps=4, seed=0,
+                         metrics_frame=frame)
         ctx = ParallelContext(mesh=make_mesh((8,), ("data",)))
         state = init_train_state(init_model(jax.random.PRNGKey(0), cfg), tc)
         K, B, L = 2, 8, 16
@@ -403,15 +405,18 @@ def _trainer_scenario():
     from repro.analysis.hostsync import guard_host_transfers, jit_cache_sizes
     from repro.configs.base import TrainConfig
     from repro.data import LMTaskConfig, SyntheticLM, stack_batches
+    from repro.obs.trace import Tracer
     from repro.training.loop import Trainer
     import dataclasses as dc
     cfg = dc.replace(_moe_cfg(backend="oracle"), n_layers=1, n_heads=2,
                      n_kv_heads=2, remat=False)
+    # metrics_frame stays ON and the tracer is ENABLED: the guard must
+    # stay green with the full observability layer live (DESIGN.md §15)
     tc = TrainConfig(lr=1e-3, warmup_steps=2, seed=0, steps=8)
     task = SyntheticLM(LMTaskConfig(vocab=cfg.vocab, seq_len=16))
     trainer = Trainer(cfg, tc, lambda i: task.sample_batch(i, 2),
                       chunk=2, strategy="traced_cond", prefetch=False,
-                      log=None)
+                      log=None, tracer=Tracer(enabled=True))
     fetch = lambda lo, hi: stack_batches(trainer.batch_fn, lo, hi)
     trainer._dispatch((0, 2), fetch(0, 2))       # warmup: compile outside
     evs = []
@@ -436,8 +441,13 @@ def _scheduler_scenario():
                      n_kv_heads=2, remat=False)
     params = init_model(jax.random.PRNGKey(0), cfg)
     gen = GenerateConfig(max_new=24, eos_id=-1)
+    from repro.obs import MetricsRegistry, Tracer
+    # tracer + registry live: span records and histogram observes are
+    # pure host work, so the guarded ticks must stay one-sync
     sched = ContinuousScheduler(params, cfg, gen, n_slots=4,
-                                prefill_buckets=(8,))
+                                prefill_buckets=(8,),
+                                registry=MetricsRegistry(),
+                                tracer=Tracer(enabled=True))
     for rid in range(3):
         sched.submit(Request(rid=rid,
                              tokens=np.arange(3 + rid, dtype=np.int32) + 3))
@@ -468,12 +478,16 @@ def _paged_scheduler_scenario():
                      n_kv_heads=2, remat=False)
     params = init_model(jax.random.PRNGKey(0), cfg)
     gen = GenerateConfig(max_new=24, eos_id=-1)
+    from repro.obs import MetricsRegistry, Tracer
     # ample pages: the steady-state tick must stay on the one-sync path
-    # (preemption swap-out is the documented exceptional second sync)
+    # (preemption swap-out is the documented exceptional second sync);
+    # tracer + registry live, same as the base-scheduler scenario
     sched = PagedScheduler(params, cfg, gen, n_slots=4,
                            prefill_buckets=(8,),
                            paged=PagedKVConfig(page_size=8,
-                                               n_slots_equiv=8))
+                                               n_slots_equiv=8),
+                           registry=MetricsRegistry(),
+                           tracer=Tracer(enabled=True))
     for rid in range(3):
         sched.submit(Request(rid=rid,
                              tokens=np.arange(3 + rid, dtype=np.int32) + 3))
@@ -529,6 +543,17 @@ register_executable(ExecutableSpec(
     name="train_chunk/dropped",
     build=_build_train_chunk(decision=True),
     expect={"no-collectives": {"zero": True}},
+    n_devices=8))
+
+# MetricsFrame non-interference (DESIGN.md §15): switching the in-graph
+# telemetry frame OFF must leave the compiled chunk's collectives exactly
+# at the cost model — the frame only widens the fetched metric dict, it
+# never adds (or removes) communication
+register_executable(ExecutableSpec(
+    name="train_chunk/frame_off",
+    build=_build_train_chunk(decision=False, frame=False),
+    expect={"no-collectives": _step_cost_expect(
+        _train_cfg(), tokens_per_shard=16, ep=8)},
     n_devices=8))
 
 register_executable(ExecutableSpec(

@@ -416,6 +416,10 @@ class TrainConfig:
     moment_dtype: str = "float32"        # bfloat16 for the huge archs
     loss: str = "xent"                   # xent | xent+dae (paper Web-50)
     dae_coef: float = 1.0
+    # surface the in-graph router/comm MetricsFrame (DESIGN.md §15) in
+    # every step's metric dict. Off drops ONLY telemetry outputs: the
+    # loss/update math is bitwise identical either way (tests/test_obs.py)
+    metrics_frame: bool = True
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

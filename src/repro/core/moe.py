@@ -171,6 +171,7 @@ def _routed_aux(rr, info, moe: MoEConfig, comm=None) -> Dict[str, jax.Array]:
         "router_z": R.router_z_loss(rr) if moe.router_type != "hash"
                     else jnp.zeros(()),
         "load": R.expert_load(rr, moe),
+        "router_entropy": R.route_entropy(rr),
         "dropped_frac": 1.0 - info.keep.mean(),
         **(comm if comm is not None else comm_zero()),
     }
@@ -198,7 +199,8 @@ def _local_aux(rr, info, moe: MoEConfig, T: int) -> Dict[str, jax.Array]:
     load = jnp.zeros((moe.n_experts,), jnp.float32).at[
         rr.topk_idx.reshape(-1)].add(w, mode="drop")
     return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
-            "load": load, "dropped_frac": 1.0 - info.keep.mean(),
+            "load": load, "router_entropy": R.route_entropy(rr),
+            "dropped_frac": 1.0 - info.keep.mean(),
             **comm_zero()}
 
 
@@ -276,6 +278,7 @@ def _local_shard(wr, experts_loc, xf, moe: MoEConfig, cfg: ModelConfig, rng,
 def _zero_aux(E: int):
     return {"balance": jnp.zeros(()), "router_z": jnp.zeros(()),
             "load": jnp.zeros((E,), jnp.float32),
+            "router_entropy": jnp.zeros(()),
             "dropped_frac": jnp.zeros(()), **comm_zero()}
 
 
@@ -330,6 +333,7 @@ def moe_oracle(params: Params, x: jax.Array, cfg: ModelConfig, *,
             "router_z": jax.vmap(R.router_z_loss)(rrs).mean()
                         if moe.router_type != "hash" else jnp.zeros(()),
             "load": jax.vmap(lambda r: R.expert_load(r, moe))(rrs).mean(0),
+            "router_entropy": jax.vmap(R.route_entropy)(rrs).mean(),
             "dropped_frac": 1.0 - infos.keep.mean(),
             **transport.telemetry(E, cap, shape[-1],
                                   jnp.dtype(x.dtype).itemsize),

@@ -183,6 +183,17 @@ def router_z_loss(rr: RouteResult) -> jax.Array:
     return jnp.mean(lse ** 2)
 
 
+def route_entropy(rr: RouteResult) -> jax.Array:
+    """Mean per-token entropy (nats) of the router distribution — the
+    routing-collapse monitor of the MetricsFrame (DESIGN.md §15):
+    uniform routing gives log(E), collapse onto one expert gives 0. The
+    hash router's one-hot probs report 0 by construction; Gate-Drop
+    local steps report the entropy of the local-group distribution (the
+    -inf-masked softmax is a proper distribution over the group)."""
+    p = rr.probs
+    return -jnp.sum(p * jnp.log(jnp.clip(p, 1e-20, None)), axis=-1).mean()
+
+
 def expert_load(rr: RouteResult, cfg: MoEConfig) -> jax.Array:
     """(E,) routed assignments per expert over ALL k slots, per token
     (monitoring): ``load.sum() == top_k``. Gate-Drop local steps report the

@@ -18,9 +18,11 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Dict, Iterable, Tuple
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.trace import Tracer, get_tracer
 
 Batch = Dict[str, np.ndarray]
 
@@ -43,13 +45,17 @@ class Prefetcher:
     """
 
     def __init__(self, fn: Callable[[Any], Any], items: Iterable[Any],
-                 depth: int = 2):
+                 depth: int = 2, tracer: Optional[Tracer] = None):
         self._q: "queue.Queue[Tuple[str, Any]]" = queue.Queue(
             maxsize=max(int(depth), 1))
         self._stop = threading.Event()
         self._fn = fn
         self._items = items
         self._done = False
+        # produce spans record on the worker thread (their own Perfetto
+        # track), wait spans on the consumer: a wait span with nonzero
+        # duration is exactly the time the device loop stalled on data
+        self._tracer = tracer if tracer is not None else get_tracer()
         self._thread = threading.Thread(
             target=self._work, name="prefetcher", daemon=True)
         self._thread.start()
@@ -67,7 +73,9 @@ class Prefetcher:
             for item in self._items:
                 if self._stop.is_set():
                     return
-                self._put(("ok", self._fn(item)))
+                with self._tracer.span("prefetch.produce", item=str(item)):
+                    out = self._fn(item)
+                self._put(("ok", out))
             self._put(("end", None))
         except BaseException as e:  # noqa: BLE001 — surfaced to consumer
             self._put(("err", e))
@@ -78,7 +86,8 @@ class Prefetcher:
     def __next__(self) -> Any:
         if self._done:
             raise StopIteration
-        kind, val = self._q.get()
+        with self._tracer.span("prefetch.wait"):
+            kind, val = self._q.get()
         if kind == "ok":
             return val
         self._done = True

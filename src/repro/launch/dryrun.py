@@ -14,12 +14,13 @@ Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json
 import argparse
 import json
 import re
-import time
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs import MetricsRegistry, Tracer, get_tracer, monotonic, \
+    set_tracer
 from repro.configs import (INPUT_SHAPES, ASSIGNED_ARCHS, applicable_pairs,
                            get_config, shape_applicable)
 from repro.configs.base import InputShape, ModelConfig, TrainConfig
@@ -79,7 +80,8 @@ def lower_combo(cfg: ModelConfig, shape: InputShape, mesh, *,
     if tc_overrides:
         tc = dc.replace(tc, **tc_overrides)
     key = jax.random.PRNGKey(0)
-    t0 = time.time()
+    tr = get_tracer()
+    t0 = monotonic()
 
     sh = lambda specs: to_shardings(mesh, specs)
 
@@ -135,13 +137,18 @@ def lower_combo(cfg: ModelConfig, shape: InputShape, mesh, *,
         lowered = jitted.lower(params_shape, cache_shape, tok, idx)
         tokens = shape.global_batch
 
-    t_lower = time.time() - t0
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_lower = monotonic() - t0
+    tr.instant("dryrun.lowered", arch=cfg.arch_id, shape=shape.name,
+               kind=shape.kind)
+    t0 = monotonic()
+    with tr.span("dryrun.compile", arch=cfg.arch_id, shape=shape.name):
+        compiled = lowered.compile()
+    t_compile = monotonic() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # one dict per program pre-jax-0.5
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
 
@@ -181,7 +188,8 @@ def art_path(arch: str, shape: str, mesh_name: str, tag: str = "") -> str:
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             static_decision=None, tag: str = "", verbose: bool = True,
-            overrides: Dict[str, Any] = None):
+            overrides: Dict[str, Any] = None,
+            registry: MetricsRegistry = None):
     import dataclasses
     cfg = get_config(arch)
     if overrides:
@@ -191,6 +199,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh_name = "pod512" if multi_pod else "pod256"
     res = lower_combo(cfg, shape, mesh, static_decision=static_decision,
                       tag=tag)
+    if registry is not None:
+        registry.counter("dryrun/combos").inc()
+        registry.histogram("dryrun/lower_s").observe(res["lower_s"])
+        registry.histogram("dryrun/compile_s").observe(res["compile_s"])
     path = art_path(arch, shape_name, mesh_name, tag)
     with open(path, "w") as f:
         json.dump(res, f, indent=1)
@@ -265,7 +277,15 @@ def main():
                     help="unroll layer scans: exact cost_analysis "
                          "(XLA counts scan bodies once)")
     ap.add_argument("--dtype", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the span tracer and write a Chrome-trace/"
+                         "Perfetto JSON of lower/compile timing here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write lower/compile timing histograms here "
+                         "(.prom/.txt = Prometheus text, else JSON)")
     args = ap.parse_args()
+    set_tracer(Tracer(enabled=bool(args.trace_out)))
+    reg = MetricsRegistry()
     if args.comm_table:
         assert args.arch and args.shape, "--comm-table needs --arch --shape"
         comm_table(args.arch, args.shape, multi_pod=args.multi_pod,
@@ -291,13 +311,15 @@ def main():
         for arch, shp in applicable_pairs():
             try:
                 run_one(arch, shp, multi_pod=args.multi_pod,
-                        static_decision=dec, tag=args.tag, overrides=overrides)
+                        static_decision=dec, tag=args.tag,
+                        overrides=overrides, registry=reg)
                 ok += 1
             except Exception as e:  # noqa: BLE001
                 fail.append((arch, shp, f"{type(e).__name__}: {e}"))
                 print(f"[dryrun] {arch} x {shp}: FAIL {type(e).__name__}: "
                       f"{str(e)[:300]}")
         print(f"[dryrun] done: {ok} ok, {len(fail)} failed")
+        _dryrun_obs_out(args, reg)
         if fail:
             raise SystemExit(1)
         return
@@ -306,10 +328,22 @@ def main():
     assert shape_applicable(args.arch, args.shape), \
         f"{args.arch} x {args.shape} marked inapplicable (see DESIGN.md §3)"
     res = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
-                  static_decision=dec, tag=args.tag, overrides=overrides)
+                  static_decision=dec, tag=args.tag, overrides=overrides,
+                  registry=reg)
     print(json.dumps({k: v for k, v in res.items()
                       if k not in ("collectives",)}, indent=1))
     print(json.dumps(res["collectives"], indent=1))
+    _dryrun_obs_out(args, reg)
+
+
+def _dryrun_obs_out(args, reg: MetricsRegistry) -> None:
+    if args.trace_out:
+        get_tracer().export(args.trace_out)
+    if args.metrics_out:
+        if args.metrics_out.endswith((".prom", ".txt")):
+            reg.to_prometheus(args.metrics_out)
+        else:
+            reg.to_json(args.metrics_out)
 
 
 
@@ -404,7 +438,7 @@ def exact_costs(arch: str, shape_name: str, *, multi_pod: bool = False,
     full_counts = _type_counts(cfg)
     types = sorted(full_counts, key=str)
     rows, metrics_list = [], []
-    t0 = time.time()
+    t0 = monotonic()
     for vc in variants:
         counts = _type_counts(vc)
         assert set(counts) <= set(full_counts), \
@@ -446,7 +480,7 @@ def exact_costs(arch: str, shape_name: str, *, multi_pod: bool = False,
         "flops": pred.get("flops", -1.0),
         "bytes_accessed": pred.get("bytes_accessed", -1.0),
         "memory": memory, "collectives": colls,
-        "lower_s": 0.0, "compile_s": time.time() - t0,
+        "lower_s": 0.0, "compile_s": monotonic() - t0,
     }
     with open(art_path(arch, shape_name, mesh_name, tag), "w") as f:
         json.dump(res, f, indent=1)

@@ -31,13 +31,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import PagedKVConfig, get_config, reduced
 from repro.models import init_model
+from repro.obs import (Histogram, MetricsRegistry, Tracer, monotonic,
+                       set_tracer)
 from repro.serve import (ContinuousScheduler, GenerateConfig, PagedScheduler,
                          Request, make_generate_fn, paged_kv_bytes)
 
@@ -89,8 +90,12 @@ def synth_trace(cfg, key, n: int, rate: float, buckets, max_new: int):
 
 
 def _pcts(xs):
-    xs = np.asarray(xs, np.float64)
-    return {p: float(np.percentile(xs, p)) for p in (50, 90, 99)}
+    # NaN-safe through a registry histogram: np.percentile raised on an
+    # empty sample list (zero-request traces); the snapshot never does
+    h = Histogram("_pcts")
+    for x in xs:
+        h.observe(x)
+    return h.percentiles((50, 90, 99))
 
 
 def trace_comm_section(cfg, gen, sched, ep: int) -> dict:
@@ -159,6 +164,7 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
     # so prompt and sampling keys can never collide
     reqs = synth_trace(cfg, key_prompts, args.trace,
                        args.rate, buckets, gen.max_new)
+    reg = MetricsRegistry()
     if args.paged:
         paged = PagedKVConfig(page_size=args.page_size,
                               n_pages=args.pages,
@@ -166,16 +172,18 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
         sched = PagedScheduler(params, cfg, gen, paged=paged,
                                n_slots=args.slots, prefill_buckets=buckets,
                                admit_width=args.admit_width,
-                               rng=key_sample)
+                               rng=key_sample, registry=reg)
     else:
         sched = ContinuousScheduler(params, cfg, gen, n_slots=args.slots,
                                     prefill_buckets=buckets,
                                     admit_width=args.admit_width,
-                                    rng=key_sample)
-    t0 = time.perf_counter()
+                                    rng=key_sample, registry=reg)
+    t0 = monotonic()
     results = sched.run(reqs)
-    wall = time.perf_counter() - t0
+    wall = monotonic() - t0
     n_tok = int(sum(r.length for r in results))
+    # percentiles come from the registry histograms the scheduler filled
+    # at retire time — the registry is THE backing store (DESIGN.md §15)
     rec = {
         "mode": "continuous",
         "arch": cfg.arch_id,
@@ -184,9 +192,9 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
         "wall_s": wall,
         "tok_s": n_tok / wall,
         "req_s": len(results) / wall,
-        "ttft_s": _pcts([r.ttft for r in results]),
-        "per_token_latency_s": _pcts([r.per_token_latency
-                                      for r in results]),
+        "ttft_s": reg.histogram("serve/ttft_s").percentiles((50, 90, 99)),
+        "per_token_latency_s": reg.histogram(
+            "serve/per_token_latency_s").percentiles((50, 90, 99)),
         "scheduler": dict(sched.stats),
         "slots": args.slots,
         "buckets": list(buckets),
@@ -196,7 +204,24 @@ def run_trace(args, cfg, params, gen, key_prompts, key_sample) -> dict:
         rec["comm"] = trace_comm_section(cfg, gen, sched, args.comm_ep)
     if args.paged:
         rec["cache"] = trace_cache_section(sched)
+    # throughput + scheduler stats land in the same store so one
+    # --metrics-out file carries the whole serving picture
+    reg.gauge("serve/wall_s").set(wall)
+    reg.gauge("serve/tok_s").set(rec["tok_s"])
+    reg.gauge("serve/req_s").set(rec["req_s"])
+    for k, v in sched.stats.items():
+        reg.gauge(f"serve/stats/{k}").set(float(v))
+    if args.metrics_out:
+        _write_metrics(reg, args.metrics_out)
     return rec
+
+
+def _write_metrics(reg: MetricsRegistry, path: str) -> None:
+    """.prom/.txt -> Prometheus text exposition, anything else -> JSON."""
+    if path.endswith((".prom", ".txt")):
+        reg.to_prometheus(path)
+    else:
+        reg.to_json(path)
 
 
 def main():
@@ -269,7 +294,17 @@ def main():
                     help="disable shared-prefix page caching (--paged)")
     ap.add_argument("--json-out", default=None,
                     help="write metrics JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the span tracer and write a Chrome-trace/"
+                         "Perfetto JSON of scheduler ticks here "
+                         "(DESIGN.md §15)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the serving metrics registry here "
+                         "(.prom/.txt = Prometheus text, else JSON)")
     args = ap.parse_args()
+
+    tracer = Tracer(enabled=bool(args.trace_out))
+    set_tracer(tracer)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -325,16 +360,20 @@ def main():
         if args.json_out:
             with open(args.json_out, "w") as f:
                 json.dump(rec, f, indent=1)
+        if args.trace_out:
+            tracer.export(args.trace_out)
         return
 
     batch = synth_batch(cfg, key_prompts, args.batch, args.prompt_len)
     fn = make_generate_fn(cfg, gen)
-    t0 = time.time()
-    res = jax.block_until_ready(fn(params, batch, key_sample))  # compile+run
-    t_compile = time.time() - t0
-    t0 = time.time()
-    res = jax.block_until_ready(fn(params, batch, key_sample))
-    dt = time.time() - t0
+    t0 = monotonic()
+    with tracer.span("generate.compile"):
+        res = jax.block_until_ready(fn(params, batch, key_sample))
+    t_compile = monotonic() - t0
+    t0 = monotonic()
+    with tracer.span("generate.steady"):
+        res = jax.block_until_ready(fn(params, batch, key_sample))
+    dt = monotonic() - t0
     n_tok = int(np.asarray(res.lengths).sum())
     print(f"arch={cfg.arch_id} batch={args.batch} prompt={args.prompt_len} "
           f"new={args.max_new} beam={args.beam}")
@@ -348,6 +387,14 @@ def main():
                "compile_s": t_compile}
         with open(args.json_out, "w") as f:
             json.dump(rec, f, indent=1)
+    if args.trace_out:
+        tracer.export(args.trace_out)
+    if args.metrics_out:
+        reg = MetricsRegistry()
+        reg.gauge("serve/compile_s").set(t_compile)
+        reg.gauge("serve/wall_s").set(dt)
+        reg.gauge("serve/tok_s").set(n_tok / dt)
+        _write_metrics(reg, args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from repro.core.moe import ParallelContext
 from repro.data import MTTaskConfig, MultilingualMT, LMTaskConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.metrics import corpus_bleu, strip_special
+from repro.obs import MetricsRegistry, Tracer, router_health, set_tracer
 from repro.serve import GenerateConfig, generate
 from repro.training import Trainer
 
@@ -122,7 +123,23 @@ def main():
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--no-metrics-frame", action="store_true",
+                    help="drop the in-graph router/comm MetricsFrame "
+                         "outputs (telemetry only — the loss/update math "
+                         "is bitwise identical either way, DESIGN.md §15)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable the span tracer and write a Chrome-trace/"
+                         "Perfetto JSON of the run here (DESIGN.md §15)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics-registry summary of the run "
+                         "(.prom/.txt = Prometheus text, else JSON)")
+    ap.add_argument("--jax-profile", default=None, metavar="LOGDIR",
+                    help="wrap the run in a jax.profiler trace window "
+                         "(TensorBoard/Perfetto logdir)")
     args = ap.parse_args()
+
+    tracer = Tracer(enabled=bool(args.trace_out))
+    set_tracer(tracer)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -158,7 +175,8 @@ def main():
 
     tc = TrainConfig(lr=args.lr, warmup_steps=args.warmup, steps=args.steps,
                      seed=args.seed, schedule=args.schedule,
-                     microbatches=args.microbatches)
+                     microbatches=args.microbatches,
+                     metrics_frame=not args.no_metrics_frame)
     task, batch_fn = build_batch_fn(cfg, args)
     eval_fn = None
     if args.eval_every and args.task == "mt":
@@ -175,7 +193,11 @@ def main():
         # data stream (batch_fn) and the Gating-Dropout consensus PRNG
         # (seed, step) pick up exactly where the checkpointed run left off
         print(f"resumed {args.ckpt_dir} @ step {trainer.restore()}")
-    state, history = trainer.run()
+    if args.jax_profile:
+        with tracer.profile_window(args.jax_profile):
+            state, history = trainer.run()
+    else:
+        state, history = trainer.run()
     if args.ckpt_dir:
         print(f"checkpoint -> {args.ckpt_dir}")
     gd = cfg.moe.gating_dropout if cfg.moe is not None else None
@@ -183,6 +205,26 @@ def main():
         with open(args.json_out, "w") as f:
             json.dump({"arch": cfg.arch_id, "history": history,
                        "gd": dataclasses.asdict(gd) if gd else None}, f)
+    if args.trace_out:
+        tracer.export(args.trace_out)
+    if args.metrics_out:
+        reg = MetricsRegistry()
+        loss_h = reg.histogram("train/loss", "recorded per-step loss")
+        tok_h = reg.histogram("train/tok_s", "tokens/s at record points")
+        for rec in history:
+            loss_h.observe(rec["loss"])
+            tok_h.observe(rec["tok_s"])
+        if history:
+            reg.gauge("train/final_loss").set(history[-1]["loss"])
+            reg.gauge("train/wall_s").set(history[-1]["time_s"])
+        rh = router_health(history)
+        if rh["records"]:
+            for k, v in rh.items():
+                reg.gauge(f"train/router/{k}").set(float(v))
+        if path_is_prom := args.metrics_out.endswith((".prom", ".txt")):
+            reg.to_prometheus(args.metrics_out)
+        if not path_is_prom:
+            reg.to_json(args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Unified observability layer (DESIGN.md §15).
+
+Three parts, one invariant:
+
+  * ``obs.trace``    — host-side span tracer on the repo's single
+                       monotonic clock, Chrome-trace/Perfetto export;
+  * ``obs.frame``    — typed host view over the in-graph router/comm
+                       MetricsFrame the train chunks accumulate on
+                       device;
+  * ``obs.registry`` — counters/gauges/histograms/series backing the
+                       serving schedulers' stats, with Prometheus/JSON
+                       export.
+
+The invariant: observability NEVER adds a host-device sync. The frame
+rides the chunk's existing once-per-chunk ``device_get``; the tracer and
+registry are pure host work (lint's host-sync pass runs the instrumented
+tick scenarios to prove it).
+"""
+from repro.obs.frame import (FRAME_KEYS, MetricsFrame, load_imbalance,
+                             router_health)
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                Series)
+from repro.obs.trace import Tracer, get_tracer, monotonic, set_tracer
+
+__all__ = [
+    "Counter", "FRAME_KEYS", "Gauge", "Histogram", "MetricsFrame",
+    "MetricsRegistry", "Series", "Tracer", "get_tracer", "load_imbalance",
+    "monotonic", "router_health", "set_tracer",
+]

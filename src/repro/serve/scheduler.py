@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -47,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, PagedKVConfig
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import Tracer, get_tracer, monotonic
 from repro.serve.engine import (GenerateConfig, _check_local_routing,
                                 _select_rows, decode_pool_step,
                                 prefill_into_slots, slot_pool_like)
@@ -149,7 +150,9 @@ class ContinuousScheduler:
                  prefill_buckets: Sequence[int] = (8, 16, 32, 64),
                  admit_width: Optional[int] = None,
                  max_seq: Optional[int] = None,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         assert gen.beam_width == 1, "continuous batching serves sampling/" \
             "greedy requests; beam search stays on the one-shot engine"
         _check_local_routing(cfg, gen)
@@ -189,19 +192,41 @@ class ContinuousScheduler:
         self.stats = {"admitted": 0, "finished": 0, "prefill_calls": 0,
                       "decode_steps": 0, "max_concurrent": 0,
                       "slot_reuse": 0}
+        # observability (DESIGN.md §15): one registry backs every serving
+        # metric of this scheduler — the legacy tick_log/alive_log
+        # attributes are live views over two registry Series, and TTFT /
+        # per-token latency land in registry histograms at retire time
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else get_tracer()
         # (kind, tokens) per executed device call, in order — the comm
         # accounting feed: launch/serve.py --trace prices each tick with
         # the substrate bytes model (comm/cost.py, DESIGN.md §10)
-        self.tick_log: List[Tuple[str, int]] = []
+        self._ticks = self.metrics.series(
+            "serve/tick_log", "device calls: label=kind, value=tokens")
         # live-slot count per decode tick: the sustained-concurrency
         # series benchmarks/table10_paged.py compares across cache layouts
-        self.alive_log: List[int] = []
+        self._alive_series = self.metrics.series(
+            "serve/alive_log", "live slots per decode tick")
+        self._ttft = self.metrics.histogram(
+            "serve/ttft_s", "arrival -> first token, seconds")
+        self._lat = self.metrics.histogram(
+            "serve/per_token_latency_s", "request seconds per token")
         self._slot_uses = np.zeros(n_slots, np.int64)
         self._prefill = _bucket_prefill_fn(cfg, gen, ctx, self.max_seq)
         self._decode_fn = _pool_decode_fn(cfg, gen, ctx)
         # clock state so the tick API (submit + step) works without run()
-        self._t0 = time.perf_counter()
+        self._t0 = monotonic()
         self._skip = 0.0
+
+    # -- legacy metric views (exact aliases of the registry Series) ---------
+
+    @property
+    def tick_log(self) -> List[Tuple[str, int]]:
+        return self._ticks.items
+
+    @property
+    def alive_log(self) -> List[int]:
+        return self._alive_series.values
 
     # -- request intake -----------------------------------------------------
 
@@ -247,11 +272,14 @@ class ContinuousScheduler:
             if rid is None or not self._done[s]:
                 continue
             meta = self._meta[rid]
-            out.append(RequestResult(
+            res = RequestResult(
                 rid=rid, tokens=np.asarray(self._buffers[rid], np.int32),
                 length=int(self._length[s]), score=float(self._score[s]),
                 arrival=meta["arrival"], admitted_at=meta["admitted_at"],
-                first_token_at=meta["first_token_at"], finished_at=now))
+                first_token_at=meta["first_token_at"], finished_at=now)
+            out.append(res)
+            self._ttft.observe(res.ttft)
+            self._lat.observe(res.per_token_latency)
             self._slot_rid[s] = None
             self._active[s] = False
             self._done[s] = False
@@ -272,6 +300,13 @@ class ContinuousScheduler:
         return True
 
     def _admit(self, now: float):
+        if not (self._free and self._queue
+                and self._queue[0].arrival <= now):
+            return
+        with self.tracer.span("sched.admit", queued=len(self._queue)):
+            self._admit_loop(now)
+
+    def _admit_loop(self, now: float):
         while self._free and self._queue \
                 and self._queue[0].arrival <= now:
             # head-of-queue request sets the bucket; scan the ELIGIBLE
@@ -371,20 +406,22 @@ class ContinuousScheduler:
                                        first_token_at=t_first)
             self.stats["admitted"] += 1
         self.stats["prefill_calls"] += 1
-        self.tick_log.append(("prefill", W * bucket))
+        self._ticks.append(W * bucket, label="prefill")
         self.stats["max_concurrent"] = max(
             self.stats["max_concurrent"],
             int(self._active[:self.n_slots].sum()))
 
     def _prefill_group(self, group: List[Request], bucket: int, now: float):
-        W, lengths, slots, seeds, batch = self._stage_group(group, bucket)
-        pool, tok0, lp0 = self._prefill(
-            self.params, batch, jnp.asarray(lengths), jnp.asarray(slots),
-            self.pool, self.rng, jnp.asarray(seeds))
-        self.pool = pool
-        tok0, lp0 = jax.device_get((tok0, lp0))   # the tick's one sync
-        self._finish_admission(group, bucket, W, lengths, slots, seeds,
-                               tok0, lp0, now)
+        with self.tracer.span("sched.prefill", bucket=bucket,
+                              group=len(group)):
+            W, lengths, slots, seeds, batch = self._stage_group(group, bucket)
+            pool, tok0, lp0 = self._prefill(
+                self.params, batch, jnp.asarray(lengths), jnp.asarray(slots),
+                self.pool, self.rng, jnp.asarray(seeds))
+            self.pool = pool
+            tok0, lp0 = jax.device_get((tok0, lp0))   # the tick's one sync
+            self._finish_admission(group, bucket, W, lengths, slots, seeds,
+                                   tok0, lp0, now)
 
     def _decode_call(self, alive):
         """Launch the pool decode executable (overridden by the paged
@@ -401,11 +438,16 @@ class ContinuousScheduler:
         alive = self._active & ~self._done
         if not alive[:self.n_slots].any():
             return
+        with self.tracer.span("sched.decode",
+                              alive=int(alive[:self.n_slots].sum())):
+            self._decode_tick_body(alive)
+
+    def _decode_tick_body(self, alive):
         nxt, lp = self._decode_call(alive)
         # recompute: paged page-exhaustion preemption can deactivate slots
         # inside the decode call (their rows decode dead, outputs ignored)
         alive = self._active & ~self._done
-        self.alive_log.append(int(alive[:self.n_slots].sum()))
+        self._alive_series.append(int(alive[:self.n_slots].sum()))
         nxt, lp = jax.device_get((nxt, lp))       # the tick's one sync
         for s in range(self.n_slots):
             if not alive[s]:
@@ -420,12 +462,12 @@ class ContinuousScheduler:
                                              int(self._ngen[s]),
                                              int(self._budget[s]))
         self.stats["decode_steps"] += 1
-        self.tick_log.append(("decode", self.n_slots + 1))
+        self._ticks.append(self.n_slots + 1, label="decode")
 
     # -- driving loop -------------------------------------------------------
 
     def _now(self) -> float:
-        return time.perf_counter() - self._t0 + self._skip
+        return monotonic() - self._t0 + self._skip
 
     def step(self, now: float) -> List[RequestResult]:
         """One scheduler tick: retire finished slots, admit eligible
@@ -441,7 +483,7 @@ class ContinuousScheduler:
         sparse traces don't busy-wait."""
         for r in sorted(requests, key=lambda r: r.arrival):
             self.submit(r)
-        self._t0 = time.perf_counter()
+        self._t0 = monotonic()
         self._skip = 0.0
         results: List[RequestResult] = []
         while self._queue or self._active[:self.n_slots].any():
@@ -568,10 +610,13 @@ class PagedScheduler(ContinuousScheduler):
                  prefill_buckets: Sequence[int] = (8, 16, 32, 64),
                  admit_width: Optional[int] = None,
                  max_seq: Optional[int] = None,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         super().__init__(params, cfg, gen, n_slots=n_slots, ctx=ctx,
                          prefill_buckets=prefill_buckets,
-                         admit_width=admit_width, max_seq=max_seq, rng=rng)
+                         admit_width=admit_width, max_seq=max_seq, rng=rng,
+                         registry=registry, tracer=tracer)
         _, seq_axes = _cache_page_axes(cfg)
         if not any(a >= 0 for a in jax.tree.leaves(seq_axes)):
             raise ValueError(
@@ -686,6 +731,10 @@ class PagedScheduler(ContinuousScheduler):
                 shared = list(hit)
                 self.stats["prefix_hits"] += 1
                 self._prefix.hits += 1
+                self.tracer.instant("prefix_cache.hit", rid=req.rid,
+                                    shared_pages=len(shared))
+            else:
+                self.tracer.instant("prefix_cache.miss", rid=req.rid)
         n_fresh = need - len(shared)
         if self._free_capacity() < n_fresh + self.paged.reserve_pages:
             return False                # backpressure
@@ -736,6 +785,10 @@ class PagedScheduler(ContinuousScheduler):
         need = self.layout.pages_for(st.pos + self._n_meta)
         if self._free_capacity() < need + self.paged.reserve_pages:
             return False
+        with self.tracer.span("sched.swap_in", rid=req.rid, pages=need):
+            return self._swap_in(req, st, need)
+
+    def _swap_in(self, req: Request, st: _SwapState, need: int) -> bool:
         pages = [self._page_or_none() for _ in range(need)]
         assert all(p is not None for p in pages)
         s = self._free.popleft()
@@ -786,6 +839,10 @@ class PagedScheduler(ContinuousScheduler):
 
     def _preempt(self, s: int):
         rid = self._slot_rid[s]
+        with self.tracer.span("sched.preempt.swap_out", rid=rid, slot=s):
+            self._swap_out(s, rid)
+
+    def _swap_out(self, s: int, rid: int):
         # the victim's own write-block may have been COW'd earlier in this
         # _ensure_writable pass — its table already points at the copy
         # destination, so the pending copy must execute before the gather
@@ -838,11 +895,12 @@ class PagedScheduler(ContinuousScheduler):
         w = 1
         while w < len(src):
             w *= 2
-        src = src + [scratch] * (w - len(src))
-        dst = dst + [scratch] * (w - len(dst))
-        self.pool = self._copy(self.pool,
-                               jnp.asarray(np.asarray(src, np.int32)),
-                               jnp.asarray(np.asarray(dst, np.int32)))
+        with self.tracer.span("sched.cow_flush", pairs=len(src), width=w):
+            src = src + [scratch] * (w - len(src))
+            dst = dst + [scratch] * (w - len(dst))
+            self.pool = self._copy(self.pool,
+                                   jnp.asarray(np.asarray(src, np.int32)),
+                                   jnp.asarray(np.asarray(dst, np.int32)))
 
     def _ensure_writable(self, alive):
         """Pre-decode pass: every live slot's write-block must point at a
@@ -921,7 +979,7 @@ def static_batch_serve(params, cfg: ModelConfig, gen: GenerateConfig,
         g.append(r)
     g2 = dataclasses.replace(gen, max_seq=max_seq or gen.max_seq)
     out: Dict[int, np.ndarray] = {}
-    t0 = time.perf_counter()
+    t0 = monotonic()
     for g in order:
         batch = {"tokens": jnp.asarray(np.stack([r.tokens for r in g]))}
         for k in g[0].extras:
@@ -935,4 +993,4 @@ def static_batch_serve(params, cfg: ModelConfig, gen: GenerateConfig,
         for i, r in enumerate(g):
             n = min(int(lens[i]), r.max_new or gen.max_new)
             out[r.rid] = toks[i, :n]
-    return out, time.perf_counter() - t0
+    return out, monotonic() - t0

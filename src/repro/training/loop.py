@@ -31,7 +31,6 @@ always sees exactly the post-step params the legacy loop evaluated.
 from __future__ import annotations
 
 import json
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -44,6 +43,8 @@ from repro.core.gating_dropout import drop_decision, drop_decisions_host
 from repro.core.moe import ParallelContext
 from repro.data.prefetch import Prefetcher, stack_batches
 from repro.models import init_model
+from repro.obs.frame import load_imbalance
+from repro.obs.trace import Tracer, get_tracer, monotonic
 from repro.training.steps import init_train_state, make_train_step
 
 # tokens a step consumes: decoder tokens AND (for enc-dec tasks) encoder
@@ -144,7 +145,8 @@ class Trainer:
                  log_every: int = 20,
                  prefetch: bool = True,
                  prefetch_depth: int = 2,
-                 log: Optional[Callable[[str], None]] = print):
+                 log: Optional[Callable[[str], None]] = print,
+                 tracer: Optional[Tracer] = None):
         self.cfg, self.tc, self.ctx = cfg, tc, ctx
         self.batch_fn = batch_fn
         self.chunk = max(int(chunk), 1)
@@ -163,6 +165,9 @@ class Trainer:
         self.start_step = 0
         self.history: List[Dict] = []
         self.chunk_fn = make_chunk_step(cfg, tc, ctx)
+        # span tracer (DESIGN.md §15): default is the process-global one
+        # (disabled unless a launcher enabled it via --trace-out)
+        self.tracer = tracer if tracer is not None else get_tracer()
 
     # ---- resume -----------------------------------------------------------
     def restore(self) -> int:
@@ -210,18 +215,32 @@ class Trainer:
         jax.device_get — the analysis.hostsync guard flags implicit
         pulls inside steady-state ticks)."""
         s, e = span
+        tr = self.tracer
+        # jit-retrace detection: _cache_size is host-only introspection,
+        # read only when tracing (it never syncs, but stays off the
+        # steady path regardless)
+        n0 = tr.enabled and self.chunk_fn._cache_size()
         if self.strategy == "traced_cond":
             dev = {k: jnp.asarray(v) for k, v in stacked.items()}
-            self.state, ms = self.chunk_fn(self.state, dev, None)
+            with tr.span("chunk.execute", start=s, stop=e,
+                         decision="traced"), \
+                    tr.annotation("train_chunk"):
+                self.state, ms = self.chunk_fn(self.state, dev, None)
             parts = [ms]
         else:
             parts = []
             for rs, re, dec in same_decision_runs(self.gd, self.tc.seed, s, e):
                 sub = {k: jnp.asarray(v[rs - s:re - s])
                        for k, v in stacked.items()}
-                self.state, m = self.chunk_fn(self.state, sub, dec)
+                with tr.span("chunk.execute", start=rs, stop=re,
+                             decision=bool(dec)), \
+                        tr.annotation("train_chunk"):
+                    self.state, m = self.chunk_fn(self.state, sub, dec)
                 parts.append(m)
-        parts = jax.device_get(parts)
+        if tr.enabled and self.chunk_fn._cache_size() > n0:
+            tr.instant("jit_retrace", fn="chunk_fn", start=s, stop=e)
+        with tr.span("chunk.fetch", start=s, stop=e):
+            parts = jax.device_get(parts)
         return {k: np.concatenate([p[k] for p in parts])
                 for k in parts[0]}
 
@@ -229,17 +248,21 @@ class Trainer:
         tc = self.tc
         spans = self.schedule()
         fetch = lambda span: stack_batches(self.batch_fn, *span)  # noqa: E731
-        it = (Prefetcher(fetch, spans, self.prefetch_depth)
+        it = (Prefetcher(fetch, spans, self.prefetch_depth,
+                         tracer=self.tracer)
               if self.prefetch else map(fetch, spans))
         rec_steps, eval_steps = self._record_steps(), self._eval_steps()
-        tokens_done, t0 = 0, time.time()
+        tokens_done, t0 = 0, monotonic()
         try:
             for span, stacked in zip(spans, it):
                 s, e = span
                 tok_per_step = sum(int(stacked[k][0].size)
                                    for k in TOKEN_KEYS if k in stacked)
-                ms = self._dispatch(span, stacked)
-                el = time.time() - t0
+                with self.tracer.span("train_chunk", start=s, stop=e,
+                                      strategy=self.strategy,
+                                      tokens=(e - s) * tok_per_step):
+                    ms = self._dispatch(span, stacked)
+                el = monotonic() - t0
                 tokens_done += (e - s) * tok_per_step
                 for i in range(s, e):
                     if i not in rec_steps:
@@ -270,8 +293,18 @@ class Trainer:
                             ms["comm_exposed_bytes"][j])
                         rec["comm_hidden_bytes"] = float(
                             ms["comm_hidden_bytes"][j])
+                    if "router_entropy" in ms:
+                        # MetricsFrame router-health fields (§15): per-
+                        # step entropy / load imbalance / consensus bit,
+                        # already on host from the chunk fetch
+                        rec["router_entropy"] = float(
+                            ms["router_entropy"][j])
+                        rec["load_imbalance"] = float(load_imbalance(
+                            np.asarray(ms["expert_load"][j])))
+                        rec["gate_dropped"] = float(ms["gate_dropped"][j])
                     if i in eval_steps:   # schedule guarantees i == e - 1
-                        rec.update(self.eval_fn(self.state, i))
+                        with self.tracer.span("eval", step=i):
+                            rec.update(self.eval_fn(self.state, i))
                     self.history.append(rec)
                     if self.log is not None:
                         self.log(json.dumps(rec))

@@ -100,7 +100,7 @@ def chunked_xent(hidden: jax.Array, head: jax.Array, labels: jax.Array,
 
 
 def total_loss(params, batch, cfg: ModelConfig, ctx, *, rng, decision,
-               is_training=True):
+               is_training=True, frame=True):
     from repro.models.model import head_matrix
     hidden, aux = model_apply(params, batch, cfg, ctx, rng=rng,
                               decision=decision, is_training=is_training,
@@ -123,7 +123,6 @@ def total_loss(params, batch, cfg: ModelConfig, ctx, *, rng, decision,
         # step's forward pass moved (0 on Gate-Drop/local steps; the
         # backward pass doubles the wire, see comm/cost.py::step_cost)
         metrics.update(balance=bal, router_z=zl,
-                       expert_load=aux["load"] / nmoe,
                        dropped_frac=aux["dropped_frac"] / nmoe,
                        comm_a2a_calls=aux["comm_a2a_calls"],
                        comm_bytes=aux["comm_bytes"],
@@ -133,6 +132,14 @@ def total_loss(params, batch, cfg: ModelConfig, ctx, *, rng, decision,
                        # exposed remainder (= wire for non-overlapped)
                        comm_exposed_bytes=aux["comm_exposed_bytes"],
                        comm_hidden_bytes=aux["comm_hidden_bytes"])
+        if frame:
+            # MetricsFrame router-health fields (DESIGN.md §15): the aux
+            # values are already accumulated on device; surfacing them
+            # only widens the fetched metric dict — the gate-drop
+            # decision rate joins in make_train_step, where the step's
+            # consensus bit is in scope
+            metrics.update(expert_load=aux["load"] / nmoe,
+                           router_entropy=aux["router_entropy"] / nmoe)
     if cfg.mtp and is_training and "mtp_hidden" in aux:
         labels2 = jnp.roll(labels, -1, axis=1)
         m2 = (mask if mask is not None else jnp.ones_like(labels, jnp.float32))
@@ -154,6 +161,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig,
     (traced_cond). Python bool -> baked into the executable (host_cond;
     jit caches one executable per value)."""
 
+    frame = tc.metrics_frame
+
     def step_fn(state: TrainState, batch: Dict, decision) -> Tuple[TrainState, Dict]:
         step = state["step"]
         rng = jax.random.fold_in(jax.random.PRNGKey(tc.seed), step)
@@ -162,7 +171,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig,
             decision = drop_decision(cfg.moe.gating_dropout, tc.seed, step)
         grad_fn = jax.value_and_grad(
             lambda p, b, r: total_loss(p, b, cfg, ctx, rng=r,
-                                       decision=decision), has_aux=True)
+                                       decision=decision, frame=frame),
+            has_aux=True)
         k = max(tc.microbatches, 1)
         if k == 1:
             (loss, metrics), grads = grad_fn(state["params"], batch, rng)
@@ -203,6 +213,13 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig,
         new_params, new_opt, opt_m = adam_update(grads, state["opt"],
                                                  state["params"], tc)
         metrics.update(opt_m)
+        if frame and cfg.moe is not None:
+            # the frame's gate-drop decision-rate field: the step's
+            # consensus bit as 0/1 — traced under traced_cond, a baked
+            # constant under host_cond, 0 with gating dropout off
+            metrics["gate_dropped"] = (
+                jnp.zeros((), jnp.float32) if decision is None
+                else jnp.asarray(decision, jnp.float32))
         return {"params": new_params, "opt": new_opt, "step": step + 1}, metrics
 
     if jit:

@@ -23,7 +23,8 @@ def run_py(code: str, n_devices: int = 8, timeout: int = 560) -> str:
     return r.stdout
 
 
-_GUARDED_MODULES = ("test_trainer", "test_serve", "test_scheduler")
+_GUARDED_MODULES = ("test_trainer", "test_serve", "test_scheduler",
+                    "test_obs")
 
 
 @pytest.fixture(autouse=True)

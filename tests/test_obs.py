@@ -1,0 +1,312 @@
+"""Observability layer tests (repro.obs, DESIGN.md §15).
+
+Anchors: the exported trace is valid Chrome trace-event JSON with correct
+span nesting and per-thread tracks; a DISABLED tracer records nothing and
+allocates nothing per call; the in-graph MetricsFrame changes not one bit
+of the train-state stream when toggled (telemetry only); registry
+percentiles match np.percentile exactly and never raise on empty data;
+the schedulers' tick_log/alive_log stay exact live views over the
+registry. This module runs under the conftest host-transfer guard, so
+every instrumented path exercised here is also proven free of hidden
+device->host syncs.
+"""
+import dataclasses
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (GatingDropoutConfig, ModelConfig, MoEConfig,
+                                TrainConfig)
+from repro.data import LMTaskConfig, SyntheticLM
+from repro.models import init_model
+from repro.obs import (FRAME_KEYS, MetricsFrame, MetricsRegistry, Tracer,
+                       load_imbalance, monotonic, router_health)
+from repro.serve import ContinuousScheduler, GenerateConfig, Request
+from repro.training import Trainer, init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(moe=True, rate=0.5):
+    kw = {}
+    if moe:
+        kw["moe"] = MoEConfig(n_experts=4, top_k=1, d_ff_expert=64,
+                              jitter_eps=0.0,
+                              gating_dropout=GatingDropoutConfig(
+                                  mode="gate_drop", rate=rate))
+    return ModelConfig(d_model=32, d_ff=64, vocab=64, n_layers=2, n_heads=2,
+                       n_kv_heads=2, remat=False, dtype="float32",
+                       param_dtype="float32", **kw)
+
+
+# ---------------------------------------------------------------------------
+# tracer: spans, nesting, export schema
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_export_schema(tmp_path):
+    """Nested spans + instants + a worker-thread event export to valid
+    Chrome trace-event JSON: X events with µs ts/dur, containment of the
+    inner slice, 's':'t' instants, per-thread thread_name metadata."""
+    tr = Tracer(enabled=True)
+    with tr.span("outer", step=3):
+        with tr.span("inner", kind="fetch"):
+            tr.instant("mark", hit=True)
+    t = threading.Thread(target=lambda: tr.instant("from_worker"),
+                         name="worker")
+    t.start()
+    t.join()
+    tr.counter("alive", slots=2)
+
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())          # round-trips from disk
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    by_name = {e["name"]: e for e in evs}
+
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {"repro", "MainThread", "worker"} <= {
+        e["args"]["name"] for e in meta}
+
+    outer, inner = by_name["outer"], by_name["inner"]
+    assert outer["ph"] == inner["ph"] == "X"
+    assert outer["args"] == {"step": 3}
+    # µs since the tracer epoch; the inner slice nests inside the outer
+    assert 0 <= outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    assert by_name["mark"]["s"] == "t"
+    assert by_name["mark"]["args"] == {"hit": True}
+    assert by_name["alive"]["ph"] == "C"
+    # the worker-thread instant landed on its own dense track
+    assert by_name["from_worker"]["tid"] != by_name["outer"]["tid"]
+
+
+def test_tracer_args_jsonable():
+    """Non-primitive span args are stringified, never break export."""
+    tr = Tracer(enabled=True)
+    with tr.span("s", shape=(2, 3), obj=object()):
+        pass
+    doc = tr.export()
+    args = [e for e in doc["traceEvents"] if e["name"] == "s"][0]["args"]
+    assert args["shape"] == "(2, 3)"
+    assert isinstance(args["obj"], str)
+    json.dumps(doc)
+
+
+def test_disabled_tracer_costs_nothing():
+    """The disabled fast path: one shared no-op context manager (no
+    per-call allocation), zero events, and 100k instrumented no-op blocks
+    complete in well under a second."""
+    tr = Tracer(enabled=False)
+    assert tr.span("a", x=1) is tr.span("b")    # shared _NULL, no alloc
+    t0 = monotonic()
+    for i in range(100_000):
+        with tr.span("chunk", step=i):
+            pass
+        tr.instant("mark")
+    dt = monotonic() - t0
+    assert len(tr) == 0
+    evs = tr.export()["traceEvents"]            # only process metadata
+    assert [e["name"] for e in evs] == ["process_name"]
+    assert dt < 1.0, f"disabled tracer overhead {dt:.3f}s for 100k spans"
+
+
+# ---------------------------------------------------------------------------
+# MetricsFrame: bitwise non-interference + host-side math
+# ---------------------------------------------------------------------------
+
+def test_metrics_frame_bitwise_non_interference():
+    """metrics_frame on vs off from identical init: the train-state
+    stream and the loss/acc metrics are BITWISE identical — the switch
+    only adds/removes telemetry keys."""
+    cfg = _cfg()
+    task = SyntheticLM(LMTaskConfig(vocab=cfg.vocab, seq_len=16))
+    states, metrics = {}, {}
+    for frame in (False, True):
+        tc = TrainConfig(lr=1e-3, warmup_steps=2, seed=3,
+                         metrics_frame=frame)
+        step = make_train_step(cfg, tc)
+        s = init_train_state(init_model(jax.random.PRNGKey(tc.seed), cfg),
+                             tc)
+        for i in range(3):
+            b = {k: jnp.asarray(v)
+                 for k, v in task.sample_batch(i, 4).items()}
+            s, ms = step(s, b, None)
+        states[frame], metrics[frame] = s, jax.device_get(ms)
+    for a, b in zip(jax.tree.leaves(states[False]),
+                    jax.tree.leaves(states[True])):
+        np.testing.assert_array_equal(np.asarray(jax.device_get(a)),
+                                      np.asarray(jax.device_get(b)))
+    np.testing.assert_array_equal(metrics[False]["loss"],
+                                  metrics[True]["loss"])
+    extra = set(metrics[True]) - set(metrics[False])
+    assert extra and extra <= set(FRAME_KEYS)
+    assert "router_entropy" in extra and "expert_load" in extra
+
+
+def test_metrics_frame_typed_view():
+    """from_metrics builds only from a complete frame; imbalance and
+    summary math behave on known inputs."""
+    assert MetricsFrame.from_metrics({"loss": np.zeros(2)}) is None
+    K, E = 4, 4
+    ms = {k: np.zeros(K) for k in FRAME_KEYS}
+    ms["expert_load"] = np.tile(np.asarray([1.0, 0.0, 0.0, 0.0]), (K, 1))
+    ms["router_entropy"] = np.full(K, 0.7)
+    ms["gate_dropped"] = np.asarray([0.0, 1.0, 0.0, 1.0])
+    fr = MetricsFrame.from_metrics(ms)
+    assert len(fr) == K
+    np.testing.assert_allclose(fr.load_imbalance(), np.full(K, float(E)))
+    s = fr.summary()
+    assert s["routed_steps"] == 2 and s["gate_drop_rate"] == 0.5
+    assert s["router_entropy"] == pytest.approx(0.7)
+    # uniform load = perfect balance; zero load reports 0, not a NaN
+    np.testing.assert_allclose(load_imbalance(np.ones(E)), 1.0)
+    np.testing.assert_allclose(load_imbalance(np.zeros(E)), 0.0)
+
+
+def test_router_health_over_history():
+    hist = [{"loss": 1.0},                       # pre-frame record
+            {"loss": 0.9, "router_entropy": 0.6, "load_imbalance": 2.0,
+             "gate_dropped": 0.0},
+            {"loss": 0.8, "router_entropy": 0.0, "load_imbalance": 0.0,
+             "gate_dropped": 1.0}]
+    rh = router_health(hist)
+    assert rh["records"] == 2
+    assert rh["gate_drop_rate"] == 0.5
+    # routed records only: the dropped step's zeros don't dilute health
+    assert rh["router_entropy"] == pytest.approx(0.6)
+    assert router_health([{"loss": 1.0}])["records"] == 0
+
+
+# ---------------------------------------------------------------------------
+# registry: percentile math, NaN safety, export formats, live views
+# ---------------------------------------------------------------------------
+
+def test_registry_percentiles_match_numpy():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve/ttft_s")
+    xs = np.random.RandomState(0).lognormal(size=257)
+    for x in xs:
+        h.observe(x)
+    ps = (50, 90, 99, 99.9, 7.5)
+    got = h.percentiles(ps)
+    for p in ps:
+        assert got[p] == float(np.percentile(np.float64(xs), p))
+    snap = h.snapshot()
+    assert snap["count"] == 257
+    assert snap["sum"] == pytest.approx(xs.sum())
+
+
+def test_registry_empty_histogram_is_nan_safe():
+    """The zero-request serve crash (ISSUE 10 satellite): percentiles on
+    an empty histogram return NaN instead of raising."""
+    h = MetricsRegistry().histogram("serve/ttft_s")
+    pct = h.percentiles()
+    assert set(pct) == {50, 90, 99}
+    assert all(np.isnan(v) for v in pct.values())
+    snap = h.snapshot()
+    assert snap["count"] == 0 and np.isnan(snap["mean"])
+    json.dumps(MetricsRegistry().to_json())     # and it still exports
+
+
+def test_registry_export_formats(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("serve/requests", "total requests").inc(3)
+    reg.gauge("serve/wall_s").set(1.5)
+    h = reg.histogram("serve/ttft_s")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    s = reg.series("serve/tick_log")
+    s.append(240.0, label="prefill")
+    s.append(5.0, label="decode")
+    s.append(5.0, label="decode")
+
+    doc = json.loads(reg.to_json(str(tmp_path / "m.json")))
+    assert doc["serve/requests"] == {"type": "counter", "value": 3.0}
+    assert doc["serve/tick_log"]["by_label"]["decode"] == {
+        "count": 2, "sum": 10.0}
+
+    prom = reg.to_prometheus(str(tmp_path / "m.prom"))
+    assert "# HELP serve_requests total requests" in prom
+    assert "# TYPE serve_requests counter" in prom
+    assert "serve_requests 3.0" in prom
+    assert 'serve_ttft_s{quantile="0.5"} ' in prom
+    assert "serve_ttft_s_count 3" in prom
+    assert 'serve_tick_log_count{label="decode"} 2' in prom
+    assert (tmp_path / "m.prom").read_text() == prom
+
+
+def test_registry_series_views_are_live():
+    """items/values are the live backing lists (the schedulers' legacy
+    tick_log/alive_log attributes alias them, not copy them)."""
+    s = MetricsRegistry().series("serve/tick_log")
+    items, values = s.items, s.values
+    s.append(7.0, label="decode")
+    assert items == [("decode", 7.0)] and values == [7.0]
+
+
+def test_registry_kind_collision_asserts():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(AssertionError):
+        reg.gauge("x")
+
+
+# ---------------------------------------------------------------------------
+# instrumentation coverage: trainer + scheduler under the hostsync guard
+# ---------------------------------------------------------------------------
+
+def test_trainer_instrumentation_coverage():
+    """A tiny instrumented Trainer run emits the §15 span vocabulary
+    (chunk dispatch/execute/fetch + prefetch produce/wait) and the
+    MetricsFrame lands in the history records — with this module under
+    the conftest transfer guard, the run also proves the tracer adds no
+    hidden host syncs."""
+    cfg = _cfg()
+    tc = TrainConfig(lr=1e-3, warmup_steps=2, steps=4, seed=0)
+    task = SyntheticLM(LMTaskConfig(vocab=cfg.vocab, seq_len=16))
+    tracer = Tracer(enabled=True)
+    trainer = Trainer(cfg, tc, lambda i: task.sample_batch(i, 4), chunk=2,
+                      strategy="traced_cond", log=None, tracer=tracer)
+    _, history = trainer.run()
+    names = {e[1] for e in tracer.events}
+    assert {"train_chunk", "chunk.execute", "chunk.fetch",
+            "prefetch.produce", "prefetch.wait"} <= names
+    assert history
+    for rec in history:
+        assert {"router_entropy", "load_imbalance",
+                "gate_dropped"} <= set(rec)
+    # the exported trace of a real run is loadable Chrome JSON
+    json.dumps(tracer.export())
+
+
+def test_scheduler_obs_and_compat_views():
+    """An instrumented ContinuousScheduler run: tick spans recorded,
+    TTFT/latency histograms populated at retire time, and the legacy
+    tick_log/alive_log attributes are exact views over the registry
+    series."""
+    cfg = _cfg(moe=False)
+    params = init_model(KEY, cfg)
+    reqs = [Request(rid=i, tokens=np.asarray([3 + i, 4, 5], np.int32),
+                    max_new=3, arrival=0.0) for i in range(3)]
+    reg, tracer = MetricsRegistry(), Tracer(enabled=True)
+    sched = ContinuousScheduler(params, cfg, GenerateConfig(max_new=3),
+                                n_slots=2, prefill_buckets=(4,),
+                                registry=reg, tracer=tracer)
+    results = sched.run(reqs)
+    assert len(results) == 3
+
+    names = {e[1] for e in tracer.events}
+    assert {"sched.admit", "sched.prefill", "sched.decode"} <= names
+    assert reg.histogram("serve/ttft_s").count == 3
+    assert reg.histogram("serve/per_token_latency_s").count == 3
+    assert sched.tick_log is reg.series("serve/tick_log").items
+    assert sched.alive_log is reg.series("serve/alive_log").values
+    assert any(lab == "prefill" for lab, _ in sched.tick_log)
+    assert any(lab == "decode" for lab, _ in sched.tick_log)
+    labels = {lab for lab, _ in sched.tick_log}
+    assert labels <= {"prefill", "decode"}
